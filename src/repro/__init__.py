@@ -1,0 +1,3 @@
+"""repro: LS-Gaussian (streaming 3DGS) + multi-pod JAX training substrate."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,10 @@
+"""DeepSeek-67B — llama-architecture dense decoder. [arXiv:2401.02954; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-67b", family="dense",
+    num_layers=95, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=22016, vocab_size=102400,
+    notes="95L x 8192d: FSDP(+TP) mandatory to fit 16GB/chip; see "
+          "EXPERIMENTS.md §Perf hillclimb.",
+)

@@ -1,0 +1,14 @@
+"""InternVL2-2B backbone — InternLM2-1.8B LM + ViT patch-embedding prefix.
+[arXiv:2404.16821; hf]
+
+The InternViT frontend is a STUB per the assignment: input_specs()
+provides precomputed patch embeddings (B, 256, d_model) consumed as a
+sequence prefix through a learned projection."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b", family="vlm",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=8192, vocab_size=92553,
+    num_vision_tokens=256,
+)

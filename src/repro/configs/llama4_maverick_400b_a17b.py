@@ -1,0 +1,13 @@
+"""Llama-4-Maverick-400B-A17B — MoE 128 experts top-1 + shared expert.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified] Dims per assignment;
+every layer routed (early-fusion multimodal frontend out of scope)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=8192, vocab_size=202048,
+    moe_decode_capacity_factor=4.0,  # capped decode buffer (EXPERIMENTS.md §Perf cell B)
+    num_experts=128, experts_per_token=1, num_shared_experts=1,
+    rope_theta=500000.0,
+)

@@ -1,0 +1,19 @@
+"""LS-Gaussian renderer "architecture" — the paper's own workload as an
+extra dry-run config: gaussian-parallel preprocess + tile-parallel raster.
+Not part of the assigned 10; exercised by launch/dryrun.py --arch lsgaussian.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RendererArch:
+    name: str = "lsgaussian"
+    family: str = "renderer"
+    num_gaussians: int = 2_000_000
+    image_width: int = 1920
+    image_height: int = 1088
+    tile_capacity: int = 1024
+    sh_degree: int = 3
+
+
+CONFIG = RendererArch()

@@ -1,0 +1,11 @@
+"""Mamba2-780m — attention-free SSD. [arXiv:2405.21060; unverified]
+48L d_model=1536, ssm_state=128, expand=2 -> d_inner=3072, head_dim 64."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-780m", family="ssm",
+    num_layers=48, d_model=1536, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280, attention="none",
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, tie_embeddings=True,
+    notes="runs long_500k (recurrent state, O(1) per decode step).",
+)

@@ -1,0 +1,14 @@
+"""Zamba2-7B — Mamba2 backbone with a SHARED attention+MLP block invoked
+every 6 SSM layers. [arXiv:2411.15242; unverified]
+81 mamba2 layers (d=3584, state=64); shared block: 32H GQA + 14336 MLP."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2,
+    shared_attn_every=6, shared_attn_d_ff=14336,
+    notes="runs long_500k (sub-quadratic backbone; 13 shared-attn "
+          "invocations hold the only KV cache).",
+)

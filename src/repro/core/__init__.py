@@ -1,0 +1,1 @@
+"""LS-Gaussian core: the paper's contribution (TWSR / DPES / TAIT / LDU)."""

@@ -1,0 +1,79 @@
+"""Per-tile binning + depth sort (the paper's "Sorting" stage, TPU-native).
+
+GPU 3DGS builds dynamically-sized per-tile pair lists with a global radix
+sort over (tileID | depth) keys. That shape-dynamic pattern does not map to
+TPU/XLA; instead we keep a dense (N, T) intersection mask and extract, per
+tile, the indices of the K nearest intersecting Gaussians in depth order
+(fixed capacity K, overflow counted — see DESIGN.md §3).
+
+The resulting (T, K) gather indices + validity mask are what the Pallas
+rasterizer consumes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projection import ProjectedGaussians
+
+
+class TileBins(NamedTuple):
+    indices: jax.Array   # (T, K) int32 gaussian ids, depth-ascending
+    valid: jax.Array     # (T, K) bool
+    count: jax.Array     # (T,)  int32 number of valid entries (<= K)
+    overflow: jax.Array  # (T,)  int32 pairs dropped because count > K
+    capacity: int
+
+    @property
+    def total_pairs(self) -> jax.Array:
+        return jnp.sum(self.count)
+
+
+class TileGaussians(NamedTuple):
+    """Per-tile gathered splat data — direct input to the rasterizer."""
+
+    mean2d: jax.Array   # (T, K, 2)
+    conic: jax.Array    # (T, K, 3)
+    rgb: jax.Array      # (T, K, 3)
+    opacity: jax.Array  # (T, K)
+    depth: jax.Array    # (T, K)
+    valid: jax.Array    # (T, K) bool
+
+
+def build_tile_bins(mask_nt: jax.Array, depth: jax.Array, capacity: int,
+                    *, depth_limit: jax.Array | None = None) -> TileBins:
+    """Select and depth-sort up to ``capacity`` Gaussians per tile.
+
+    mask_nt: (N, T) intersection mask; depth: (N,) camera z.
+    depth_limit: optional (T,) per-tile early-stop depth from DPES — pairs
+    beyond it are culled *before* sorting (paper Sec. IV-B: "Any Gaussians
+    beyond this depth will not be involved in sorting").
+    """
+    n = mask_nt.shape[0]
+    mask_tn = mask_nt.T                                       # (T, N)
+    if depth_limit is not None:
+        mask_tn = mask_tn & (depth[None, :] <= depth_limit[:, None])
+    key = jnp.where(mask_tn, depth[None, :], jnp.inf)         # (T, N)
+    # Stable ascending sort: invalid entries (inf) sink to the end.
+    neg_topk, idx = jax.lax.top_k(-key, min(capacity, n))     # (T, K)
+    sorted_depth = -neg_topk
+    valid = jnp.isfinite(sorted_depth)
+    count_full = jnp.sum(mask_tn, axis=1).astype(jnp.int32)   # (T,)
+    count = jnp.minimum(count_full, capacity).astype(jnp.int32)
+    overflow = jnp.maximum(count_full - capacity, 0).astype(jnp.int32)
+    return TileBins(indices=idx.astype(jnp.int32), valid=valid, count=count,
+                    overflow=overflow, capacity=capacity)
+
+
+def gather_tiles(proj: ProjectedGaussians, bins: TileBins) -> TileGaussians:
+    """Gather per-tile splat attributes. (T, K, ...)."""
+    idx = bins.indices
+    return TileGaussians(
+        mean2d=proj.mean2d[idx], conic=proj.conic[idx], rgb=proj.rgb[idx],
+        opacity=jnp.where(bins.valid, proj.opacity[idx], 0.0),
+        # NOTE: invalid entries get depth 0 (not inf): they blend with w=0 and
+        # 0 * inf would poison the depth accumulators with NaN.
+        depth=jnp.where(bins.valid, proj.depth[idx], 0.0),
+        valid=bins.valid)

@@ -1,0 +1,42 @@
+"""DPES — Depth Prediction for Early Stopping (paper Sec. IV-B).
+
+The reference frame's truncated depth map (depth at which blending
+early-stopped, produced by the rasterizer) is reprojected by
+``warp.viewpoint_transform``; this module turns the per-tile early-stop
+depths into (a) pre-sort Gaussian culling and (b) per-tile *workload
+predictions* for the LDU (Sec. V-B).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TileWorkload(NamedTuple):
+    raw: jax.Array        # (T,) pairs per tile before DPES
+    predicted: jax.Array  # (T,) pairs per tile after DPES depth culling
+    culled: jax.Array     # (T,) pairs removed by DPES
+
+
+def apply_depth_limit(mask_nt: jax.Array, depth: jax.Array,
+                      dpes_depth: jax.Array, *,
+                      margin: float = 1.0) -> jax.Array:
+    """Cull (gaussian, tile) pairs beyond the tile's early-stop depth.
+
+    mask_nt: (N, T); depth: (N,); dpes_depth: (T,) with inf = no prior.
+    ``margin`` scales the limit (1.0 = faithful to the paper).
+    """
+    limit = dpes_depth * margin
+    return mask_nt & (depth[:, None] <= limit[None, :])
+
+
+def predict_workload(mask_nt: jax.Array, depth: jax.Array,
+                     dpes_depth: jax.Array, *,
+                     margin: float = 1.0) -> TileWorkload:
+    """Per-tile effective workload estimate (pairs surviving DPES)."""
+    raw = jnp.sum(mask_nt.astype(jnp.int32), axis=0)
+    culled_mask = apply_depth_limit(mask_nt, depth, dpes_depth, margin=margin)
+    predicted = jnp.sum(culled_mask.astype(jnp.int32), axis=0)
+    return TileWorkload(raw=raw, predicted=predicted, culled=raw - predicted)

@@ -1,0 +1,182 @@
+"""Gaussian-tile intersection tests (paper Sec. IV-C).
+
+Four tests over the same (N gaussians x T tiles) domain, all returning a
+boolean mask (N, T):
+
+- ``aabb_mask``    : original 3DGS — circumscribed square of the 3-sigma
+                     circle (coarse baseline, many false positives).
+- ``obb_mask``     : GSCore-style oriented-bounding-box separating-axis test
+                     (comparison point in Fig. 9).
+- ``tait_mask``    : the paper's two-stage test — opacity-aware tight bbox
+                     (stage 1, eqs. 4+6) then the single minor-axis distance
+                     rejection (stage 2, eq. 7).
+- ``exact_mask``   : analytic ellipse-vs-rectangle oracle (FlashGS-class
+                     accuracy) used for validation and Fig. 9's lower bound.
+
+Note on eq. (7): as printed, ``|l| cos(theta) + r > R_minor`` would reject
+tiles whose centers lie within one tile-circumradius *inside* the ellipse
+boundary, i.e. it can drop true intersections. We implement the safe
+(conservative) form ``|l| cos(theta) - r > R_minor`` => reject, which keeps
+TAIT a superset of the exact test; the property test
+``tests/test_intersect.py::test_tait_between_exact_and_aabb`` enforces it.
+This sign choice is recorded in DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import TILE, Camera
+from repro.core.projection import ProjectedGaussians
+
+# Circumcircle radius of a 16x16 tile (r in eq. 7).
+TILE_CIRCUMRADIUS = float(TILE) * (2.0 ** 0.5) / 2.0
+
+
+class TileGrid(NamedTuple):
+    tiles_x: int
+    tiles_y: int
+    centers: jax.Array  # (T, 2) pixel coords of tile centers
+    origins: jax.Array  # (T, 2) pixel coords of tile upper-left corners
+
+    @property
+    def num_tiles(self) -> int:
+        return self.tiles_x * self.tiles_y
+
+
+def make_tile_grid(cam: Camera) -> TileGrid:
+    tx = jnp.arange(cam.tiles_x, dtype=jnp.float32) * TILE
+    ty = jnp.arange(cam.tiles_y, dtype=jnp.float32) * TILE
+    ox, oy = jnp.meshgrid(tx, ty, indexing="xy")
+    origins = jnp.stack([ox.ravel(), oy.ravel()], axis=-1)       # (T, 2)
+    centers = origins + TILE / 2.0
+    return TileGrid(cam.tiles_x, cam.tiles_y, centers, origins)
+
+
+def _rect_overlap(mean2d, half_wh, grid: TileGrid) -> jax.Array:
+    """Axis-aligned rectangle (center, half-extent) vs every tile. (N, T)."""
+    lo = mean2d - half_wh                                       # (N, 2)
+    hi = mean2d + half_wh
+    t_lo = grid.origins                                         # (T, 2)
+    t_hi = grid.origins + TILE
+    ov_x = (lo[:, None, 0] < t_hi[None, :, 0]) & (hi[:, None, 0] > t_lo[None, :, 0])
+    ov_y = (lo[:, None, 1] < t_hi[None, :, 1]) & (hi[:, None, 1] > t_lo[None, :, 1])
+    return ov_x & ov_y
+
+
+def aabb_mask(proj: ProjectedGaussians, grid: TileGrid) -> jax.Array:
+    """Original 3DGS test: square of half-extent 3*sqrt(lambda1). (N, T)."""
+    r = proj.radius3[:, None]
+    half = jnp.concatenate([r, r], axis=-1)
+    return _rect_overlap(proj.mean2d, half, grid) & proj.valid[:, None]
+
+
+def tait_stage1_mask(proj: ProjectedGaussians, grid: TileGrid) -> jax.Array:
+    """Stage 1: opacity-aware tight bbox of the effective ellipse. (N, T)."""
+    return _rect_overlap(proj.mean2d, proj.tight_half_wh, grid) & proj.valid[:, None]
+
+
+def tait_mask(proj: ProjectedGaussians, grid: TileGrid) -> jax.Array:
+    """Full two-stage TAIT test (stage 1 bbox, then eq. 7 rejection)."""
+    stage1 = tait_stage1_mask(proj, grid)
+    # Stage 2: component of (tile center - ellipse center) along the minor
+    # axis. Reject when it exceeds R_minor + tile circumradius (safe form).
+    d = grid.centers[None, :, :] - proj.mean2d[:, None, :]      # (N, T, 2)
+    along_minor = jnp.abs(jnp.einsum("ntc,nc->nt", d, proj.minor_axis))
+    keep = along_minor - TILE_CIRCUMRADIUS <= proj.r_minor[:, None]
+    return stage1 & keep
+
+
+def obb_mask(proj: ProjectedGaussians, grid: TileGrid) -> jax.Array:
+    """GSCore-style OBB vs tile square, separating-axis theorem. (N, T).
+
+    OBB axes = ellipse eigenvectors with half-extents (R_major, R_minor);
+    tile axes = x/y with half-extent TILE/2. Four candidate separating axes.
+    """
+    minor = proj.minor_axis                                     # (N, 2)
+    major = jnp.stack([-minor[:, 1], minor[:, 0]], axis=-1)     # perpendicular
+    d = grid.centers[None, :, :] - proj.mean2d[:, None, :]      # (N, T, 2)
+    half_t = TILE / 2.0
+    rmaj = proj.r_major[:, None]
+    rmin = proj.r_minor[:, None]
+
+    # Axis 1: image x. OBB projects to |maj_x|*rmaj + |min_x|*rmin.
+    obb_px = jnp.abs(major[:, 0:1]) * rmaj + jnp.abs(minor[:, 0:1]) * rmin
+    sep_x = jnp.abs(d[..., 0]) > (obb_px + half_t)
+    # Axis 2: image y.
+    obb_py = jnp.abs(major[:, 1:2]) * rmaj + jnp.abs(minor[:, 1:2]) * rmin
+    sep_y = jnp.abs(d[..., 1]) > (obb_py + half_t)
+    # Axis 3: ellipse major axis. Tile projects to half_t*(|ax|+|ay|).
+    tile_pm = half_t * (jnp.abs(major[:, 0:1]) + jnp.abs(major[:, 1:2]))
+    sep_maj = jnp.abs(jnp.einsum("ntc,nc->nt", d, major)) > (rmaj + tile_pm)
+    # Axis 4: ellipse minor axis.
+    tile_pn = half_t * (jnp.abs(minor[:, 0:1]) + jnp.abs(minor[:, 1:2]))
+    sep_min = jnp.abs(jnp.einsum("ntc,nc->nt", d, minor)) > (rmin + tile_pn)
+
+    separated = sep_x | sep_y | sep_maj | sep_min
+    return (~separated) & proj.valid[:, None]
+
+
+def exact_mask(proj: ProjectedGaussians, grid: TileGrid) -> jax.Array:
+    """Analytic oracle: does the effective ellipse touch the tile rectangle?
+
+    The effective ellipse is {p : (p-mu)^T Sigma^-1 (p-mu) <= rho2} with
+    rho2 = 2 ln(o / tau) (matching eq. 4's radii). A rectangle intersects
+    iff the minimum of the quadratic over the rectangle is <= rho2. The
+    minimum is attained at the center (if inside the rect) or on one of the
+    four edges; each edge minimum has a closed form (clamped 1D quadratic).
+    """
+    mu = proj.mean2d                                           # (N, 2)
+    con_a, con_b, con_c = proj.conic[:, 0], proj.conic[:, 1], proj.conic[:, 2]
+    opac = proj.opacity
+    rho2 = 2.0 * jnp.log(jnp.maximum(opac / (1.0 / 255.0), 1.0 + 1e-6))
+
+    lo = grid.origins                                           # (T, 2)
+    hi = grid.origins + TILE
+
+    def quad(dx, dy):
+        return con_a[:, None] * dx * dx + 2.0 * con_b[:, None] * dx * dy \
+            + con_c[:, None] * dy * dy
+
+    # Center inside rectangle -> minimum is 0.
+    inside = ((mu[:, None, 0] >= lo[None, :, 0]) & (mu[:, None, 0] <= hi[None, :, 0])
+              & (mu[:, None, 1] >= lo[None, :, 1]) & (mu[:, None, 1] <= hi[None, :, 1]))
+
+    # Edge minima. For a vertical edge x = x0, y in [y0, y1]:
+    # minimize A dx^2 + 2B dx dy + C dy^2 over dy => dy* = -B dx / C, clamp.
+    def vedge(x0):
+        dx = x0[None, :] - mu[:, 0:1]                           # (N, T)
+        dy_star = -con_b[:, None] * dx / jnp.maximum(con_c[:, None], 1e-12)
+        dy = jnp.clip(dy_star, lo[None, :, 1] - mu[:, 1:2],
+                      hi[None, :, 1] - mu[:, 1:2])
+        return quad(dx, dy)
+
+    def hedge(y0):
+        dy = y0[None, :] - mu[:, 1:2]
+        dx_star = -con_b[:, None] * dy / jnp.maximum(con_a[:, None], 1e-12)
+        dx = jnp.clip(dx_star, lo[None, :, 0] - mu[:, 0:1],
+                      hi[None, :, 0] - mu[:, 0:1])
+        return quad(dx, dy)
+
+    qmin = jnp.minimum(jnp.minimum(vedge(lo[:, 0]), vedge(hi[:, 0])),
+                       jnp.minimum(hedge(lo[:, 1]), hedge(hi[:, 1])))
+    qmin = jnp.where(inside, 0.0, qmin)
+    return (qmin <= rho2[:, None]) & proj.valid[:, None]
+
+
+def pair_count(mask: jax.Array) -> jax.Array:
+    """Total Gaussian-tile pairs a test admits (Fig. 9 metric)."""
+    return jnp.sum(mask.astype(jnp.int32))
+
+
+def per_tile_count(mask: jax.Array) -> jax.Array:
+    """(T,) pairs per tile — the tile workload before DPES."""
+    return jnp.sum(mask.astype(jnp.int32), axis=0)
+
+
+def intersect(proj: ProjectedGaussians, grid: TileGrid, method: str) -> jax.Array:
+    fns = {"aabb": aabb_mask, "obb": obb_mask, "tait": tait_mask,
+           "tait_stage1": tait_stage1_mask, "exact": exact_mask}
+    return fns[method](proj, grid)

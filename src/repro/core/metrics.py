@@ -1,0 +1,57 @@
+"""Image quality metrics: PSNR and SSIM (standard 11x11 Gaussian window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psnr(img: jax.Array, ref: jax.Array, *, max_val: float = 1.0) -> jax.Array:
+    mse = jnp.mean((img - ref) ** 2)
+    return 10.0 * jnp.log10(max_val * max_val / jnp.maximum(mse, 1e-12))
+
+
+def _gaussian_window(size: int = 11, sigma: float = 1.5) -> jax.Array:
+    x = jnp.arange(size, dtype=jnp.float32) - (size - 1) / 2.0
+    g = jnp.exp(-(x ** 2) / (2 * sigma ** 2))
+    g = g / jnp.sum(g)
+    return g
+
+
+def _filter2d(img: jax.Array, win: jax.Array) -> jax.Array:
+    """Separable valid-mode filtering of (H, W, C) with 1D window."""
+    def conv1d(x, axis):
+        x = jnp.moveaxis(x, axis, -1)
+        pad = 0
+        out = jax.vmap(lambda row: jnp.convolve(row, win, mode="valid"))(
+            x.reshape(-1, x.shape[-1]))
+        out = out.reshape(*x.shape[:-1], out.shape[-1])
+        return jnp.moveaxis(out, -1, axis)
+
+    out = img
+    out = conv1d(out, 0)
+    out = conv1d(out, 1)
+    return out
+
+
+def ssim(img: jax.Array, ref: jax.Array, *, max_val: float = 1.0) -> jax.Array:
+    """Mean SSIM over an (H, W, 3) image pair (Wang et al. 2004 constants)."""
+    c1 = (0.01 * max_val) ** 2
+    c2 = (0.03 * max_val) ** 2
+    win = _gaussian_window()
+
+    # Channels are independent: move to leading axis and vmap.
+    def per_channel(x, y):
+        mu_x = _filter2d(x[..., None], win)[..., 0]
+        mu_y = _filter2d(y[..., None], win)[..., 0]
+        mu_xx = mu_x * mu_x
+        mu_yy = mu_y * mu_y
+        mu_xy = mu_x * mu_y
+        sig_xx = _filter2d((x * x)[..., None], win)[..., 0] - mu_xx
+        sig_yy = _filter2d((y * y)[..., None], win)[..., 0] - mu_yy
+        sig_xy = _filter2d((x * y)[..., None], win)[..., 0] - mu_xy
+        num = (2 * mu_xy + c1) * (2 * sig_xy + c2)
+        den = (mu_xx + mu_yy + c1) * (sig_xx + sig_yy + c2)
+        return jnp.mean(num / den)
+
+    vals = jax.vmap(per_channel, in_axes=(-1, -1))(img, ref)
+    return jnp.mean(vals)

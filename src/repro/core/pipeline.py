@@ -1,0 +1,263 @@
+"""LS-Gaussian end-to-end renderer: full frames + TWSR sparse frames.
+
+The streaming loop (paper Fig. 1): one full render every ``window`` frames;
+in between, each frame is produced by viewpoint transformation (warp) +
+tile-level decisions — interpolated tiles skip preprocess/sort/raster
+entirely, re-rendered tiles go through the pipeline with DPES depth culling.
+
+``render_trajectory`` is the reference driver; per-frame work summaries
+(``FrameRecord``) feed both the GPU-style cost model and the streaming
+accelerator simulator (core/streaming.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binning, dpes, intersect, warp as warp_mod
+from repro.core.camera import TILE, Camera
+from repro.core.projection import preprocess
+from repro.core.raster import RenderOutput, render_from_bins, untile
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class RenderConfig:
+    intersect_method: str = "tait"      # "aabb" | "obb" | "tait" | "exact"
+    capacity: int = 512                 # K: max pairs per tile
+    chunk: int = 64                     # rasterizer gaussian-chunk
+    impl: str = "jnp_chunked"           # "pallas" | "jnp_chunked" | "ref"
+    window: int = 5                     # full render every n-th frame
+    use_mask: bool = True               # no-cumulative-error mask (Fig. 7)
+    use_dpes: bool = True
+    dpes_margin: float = 1.0
+    n0_ratio: float = warp_mod.N0_RATIO
+    inpaint_iters: int = 8
+    near: float = 0.05
+    min_coverage: float = warp_mod.MIN_COVERAGE
+    rerender_capacity: Optional[int] = None  # static cap on re-render tiles
+
+
+class FrameState(NamedTuple):
+    """Reference-frame state carried across the streaming loop."""
+
+    rgb: jax.Array          # (H, W, 3)
+    exp_depth: jax.Array    # (H, W)
+    trunc_depth: jax.Array  # (H, W)
+    source_mask: jax.Array  # (H, W) bool — usable reprojection sources
+    frame_idx: jax.Array    # () int32
+
+
+class FrameRecord(NamedTuple):
+    """Per-frame workload summary (device arrays; host converts for sims)."""
+
+    is_full: jax.Array          # () bool
+    n_gaussians: jax.Array      # () int32 — valid after frustum cull
+    candidate_pairs: jax.Array  # () int32 — pairs entering stage-2 test
+    raw_pairs: jax.Array        # (T,) pre-DPES pairs on scheduled tiles
+    sort_pairs: jax.Array       # (T,) post-DPES pairs entering sort
+    raster_pairs: jax.Array     # (T,) pairs actually traversed
+    active: jax.Array           # (T,) bool — re-rendered tiles
+    tiles_interpolated: jax.Array  # () int32
+    overflow_pairs: jax.Array   # () int32 — bin-capacity overflow
+    overflow_tiles: jax.Array   # () int32 — rerender_capacity overflow
+
+
+def _tile_flag_to_pixels(flag: jax.Array, tiles_x: int, tiles_y: int):
+    """(T,) -> (H, W) by broadcasting each flag over its tile."""
+    t = flag.shape[0]
+    tiles = jnp.broadcast_to(flag[:, None, None], (t, TILE, TILE))
+    return untile(tiles, tiles_x, tiles_y)
+
+
+def render_full_frame(scene, cam: Camera, cfg: RenderConfig
+                      ) -> Tuple[RenderOutput, FrameState, FrameRecord]:
+    """Key frame: the plain pipeline (preprocess -> TAIT -> sort -> raster)."""
+    proj = preprocess(scene, cam, near=cfg.near)
+    grid = intersect.make_tile_grid(cam)
+    if cfg.intersect_method == "tait":
+        stage1 = intersect.tait_stage1_mask(proj, grid)
+        mask = intersect.tait_mask(proj, grid)
+        candidate_pairs = intersect.pair_count(stage1)
+    else:
+        mask = intersect.intersect(proj, grid, cfg.intersect_method)
+        candidate_pairs = intersect.pair_count(mask)
+    bins = binning.build_tile_bins(mask, proj.depth, cfg.capacity)
+    out = render_from_bins(proj, bins, grid, impl=cfg.impl, chunk=cfg.chunk)
+
+    coverage = 1.0 - out.transmittance
+    state = FrameState(
+        rgb=out.rgb, exp_depth=out.exp_depth, trunc_depth=out.trunc_depth,
+        source_mask=coverage > cfg.min_coverage,
+        frame_idx=jnp.int32(0))
+    t = grid.num_tiles
+    rec = FrameRecord(
+        is_full=jnp.bool_(True),
+        n_gaussians=jnp.sum(proj.valid.astype(jnp.int32)),
+        candidate_pairs=candidate_pairs,
+        raw_pairs=bins.count, sort_pairs=bins.count,
+        raster_pairs=out.processed_pairs,
+        active=jnp.ones((t,), bool),
+        tiles_interpolated=jnp.int32(0),
+        overflow_pairs=jnp.sum(bins.overflow),
+        overflow_tiles=jnp.int32(0))
+    return out, state, rec
+
+
+def _render_tile_subset(proj, bins: binning.TileBins, grid, rerender,
+                        rcap: int, cfg: RenderConfig) -> RenderOutput:
+    """Rasterize only the top-``rcap`` re-render tiles; others stay empty."""
+    t = grid.num_tiles
+    order = jnp.argsort(-rerender.astype(jnp.int32), stable=True)[:rcap]
+    sel = rerender[order]                                   # (rcap,)
+    sub = binning.TileBins(
+        indices=bins.indices[order],
+        valid=bins.valid[order] & sel[:, None],
+        count=jnp.where(sel, bins.count[order], 0),
+        overflow=bins.overflow[order], capacity=bins.capacity)
+    tg = binning.gather_tiles(proj, sub)
+    rgb_t, trans_t, d_t, td_t, proc = kops.raster_tiles(
+        tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
+        grid.origins[order], sub.count, impl=cfg.impl, chunk=cfg.chunk)
+    full = lambda shape, fill: jnp.full(shape, fill, jnp.float32)
+    rgb_all = jnp.zeros((t, TILE, TILE, 3)).at[order].set(rgb_t)
+    trans_all = full((t, TILE, TILE), 1.0).at[order].set(trans_t)
+    d_all = jnp.zeros((t, TILE, TILE)).at[order].set(d_t)
+    td_all = jnp.zeros((t, TILE, TILE)).at[order].set(td_t)
+    proc_all = jnp.zeros((t,), jnp.int32).at[order].set(proc)
+    return RenderOutput(
+        rgb=untile(rgb_all, grid.tiles_x, grid.tiles_y),
+        transmittance=untile(trans_all, grid.tiles_x, grid.tiles_y),
+        exp_depth=untile(d_all, grid.tiles_x, grid.tiles_y),
+        trunc_depth=untile(td_all, grid.tiles_x, grid.tiles_y),
+        processed_pairs=proc_all)
+
+
+def render_sparse_frame(scene, ref_cam: Camera, tgt_cam: Camera,
+                        state: FrameState, cfg: RenderConfig
+                        ) -> Tuple[jax.Array, FrameState, FrameRecord]:
+    """TWSR frame (Algo. 1): warp, decide per tile, re-render the rest."""
+    w = warp_mod.viewpoint_transform(
+        state.rgb, state.exp_depth, state.trunc_depth, state.source_mask,
+        ref_cam, tgt_cam, n0_ratio=cfg.n0_ratio, near=cfg.near)
+    grid = intersect.make_tile_grid(tgt_cam)
+
+    rerender = w.rerender_tile
+    # Optional static cap on the re-render set (wall-clock path): tiles
+    # beyond capacity degrade to interpolation and are counted.
+    if cfg.rerender_capacity is not None and cfg.rerender_capacity < grid.num_tiles:
+        score = rerender.astype(jnp.int32)
+        order = jnp.argsort(-score, stable=True)[: cfg.rerender_capacity]
+        sel = jnp.zeros((grid.num_tiles,), bool).at[order].set(
+            rerender[order])
+        overflow_tiles = jnp.sum(rerender) - jnp.sum(sel)
+        rerender = sel
+    else:
+        overflow_tiles = jnp.int32(0)
+
+    proj = preprocess(scene, tgt_cam, near=cfg.near)
+    if cfg.intersect_method == "tait":
+        stage1 = intersect.tait_stage1_mask(proj, grid)
+        mask = intersect.tait_mask(proj, grid)
+        candidate_pairs = jnp.sum(
+            (stage1 & rerender[None, :]).astype(jnp.int32))
+    else:
+        mask = intersect.intersect(proj, grid, cfg.intersect_method)
+        candidate_pairs = jnp.sum(
+            (mask & rerender[None, :]).astype(jnp.int32))
+    mask_active = mask & rerender[None, :]
+    raw_pairs = jnp.sum(mask_active.astype(jnp.int32), axis=0)
+
+    limit = jnp.where(jnp.isfinite(w.dpes_depth), w.dpes_depth, jnp.inf) \
+        if cfg.use_dpes else None
+    bins = binning.build_tile_bins(
+        mask_active, proj.depth, cfg.capacity,
+        depth_limit=limit * cfg.dpes_margin if limit is not None else None)
+    if cfg.rerender_capacity is not None \
+            and cfg.rerender_capacity < grid.num_tiles:
+        # actually SKIP the non-re-rendered tiles: gather the selected
+        # tile bins, rasterize only those, scatter back — this is where
+        # TWSR's wall-clock win comes from on real hardware.
+        out = _render_tile_subset(proj, bins, grid, rerender,
+                                  cfg.rerender_capacity, cfg)
+    else:
+        out = render_from_bins(proj, bins, grid, impl=cfg.impl,
+                               chunk=cfg.chunk)
+
+    # --- compose the final frame -----------------------------------------
+    # Interpolated tiles: warped pixels + diffusion-inpainted holes; the
+    # depth maps ride the same inpainting so chaining stays consistent.
+    stacked = jnp.concatenate(
+        [w.rgb, w.exp_depth[..., None], w.trunc_depth[..., None]], axis=-1)
+    inpainted = warp_mod.inpaint(stacked, w.filled, iters=cfg.inpaint_iters)
+    rgb_warp = inpainted[..., :3]
+    depth_warp = inpainted[..., 3]
+    trunc_warp = inpainted[..., 4]
+
+    rr_px = _tile_flag_to_pixels(rerender, grid.tiles_x, grid.tiles_y)
+    rgb_final = jnp.where(rr_px[..., None], out.rgb, rgb_warp)
+    exp_depth = jnp.where(rr_px, out.exp_depth, depth_warp)
+    trunc_depth = jnp.where(rr_px, out.trunc_depth, trunc_warp)
+
+    # --- next-frame source mask (the "TW w/ mask" mechanism) -------------
+    coverage_ok = (1.0 - out.transmittance) > cfg.min_coverage
+    interpolated_px = (~rr_px) & (~w.filled)
+    if cfg.use_mask:
+        src = jnp.where(rr_px, coverage_ok, w.filled)
+    else:
+        src = jnp.where(rr_px, coverage_ok,
+                        w.filled | interpolated_px)
+    new_state = FrameState(rgb=rgb_final, exp_depth=exp_depth,
+                           trunc_depth=trunc_depth, source_mask=src,
+                           frame_idx=state.frame_idx + 1)
+    rec = FrameRecord(
+        is_full=jnp.bool_(False),
+        n_gaussians=jnp.sum(proj.valid.astype(jnp.int32)),
+        candidate_pairs=candidate_pairs,
+        raw_pairs=raw_pairs, sort_pairs=bins.count,
+        raster_pairs=out.processed_pairs,
+        active=rerender,
+        tiles_interpolated=jnp.sum(w.interpolate_tile.astype(jnp.int32)),
+        overflow_pairs=jnp.sum(bins.overflow),
+        overflow_tiles=overflow_tiles)
+    return rgb_final, new_state, rec
+
+
+class TrajectoryResult(NamedTuple):
+    frames: jax.Array              # (F, H, W, 3)
+    records: List[FrameRecord]
+    states: Optional[List[FrameState]]
+
+
+def render_trajectory(scene, cam: Camera, poses: jax.Array,
+                      cfg: RenderConfig, *, keep_states: bool = False
+                      ) -> TrajectoryResult:
+    """Render a pose sequence with the LS-Gaussian streaming loop.
+
+    poses: (F, 4, 4) world-to-camera per frame. Frame f is fully rendered
+    when f % cfg.window == 0, warped otherwise.
+    """
+    full_fn = jax.jit(functools.partial(render_full_frame, cfg=cfg))
+    sparse_fn = jax.jit(functools.partial(render_sparse_frame, cfg=cfg))
+
+    frames, records, states = [], [], []
+    state = None
+    ref_cam = None
+    for f in range(poses.shape[0]):
+        cam_f = cam.with_pose(poses[f])
+        if f % cfg.window == 0 or state is None:
+            out, state, rec = full_fn(scene, cam_f)
+            frames.append(out.rgb)
+        else:
+            rgb, state, rec = sparse_fn(scene, ref_cam, cam_f, state)
+            frames.append(rgb)
+        ref_cam = cam_f
+        records.append(rec)
+        if keep_states:
+            states.append(state)
+    return TrajectoryResult(frames=jnp.stack(frames), records=records,
+                            states=states if keep_states else None)

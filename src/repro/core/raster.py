@@ -1,0 +1,113 @@
+"""Rasterization orchestrator: tiles in, full-frame images out.
+
+Also hosts the brute-force whole-image oracle used by integration tests:
+it blends *every* valid Gaussian into *every* pixel in global depth order —
+no tiling, no intersection test, no capacity — so any tiling/binning/raster
+bug shows up as a pixel diff.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binning
+from repro.core.camera import TILE, Camera
+from repro.core.intersect import TileGrid
+from repro.core.projection import ProjectedGaussians
+from repro.kernels import ops as kops
+
+
+class RenderOutput(NamedTuple):
+    rgb: jax.Array          # (H, W, 3)
+    transmittance: jax.Array  # (H, W) final T per pixel
+    exp_depth: jax.Array    # (H, W) opacity-weighted depth (Sec. IV-A)
+    trunc_depth: jax.Array  # (H, W) early-stop depth (Sec. IV-B)
+    processed_pairs: jax.Array  # (T,) pairs traversed per tile (raster work)
+
+
+def untile(tiles: jax.Array, tiles_x: int, tiles_y: int) -> jax.Array:
+    """(T, TILE, TILE, C?) -> (H, W, C?)."""
+    extra = tiles.shape[3:]
+    x = tiles.reshape(tiles_y, tiles_x, TILE, TILE, *extra)
+    x = jnp.swapaxes(x, 1, 2)
+    return x.reshape(tiles_y * TILE, tiles_x * TILE, *extra)
+
+
+def tile_view(img: jax.Array, tiles_x: int, tiles_y: int) -> jax.Array:
+    """(H, W, C?) -> (T, TILE, TILE, C?). Inverse of ``untile``."""
+    extra = img.shape[2:]
+    x = img.reshape(tiles_y, TILE, tiles_x, TILE, *extra)
+    x = jnp.swapaxes(x, 1, 2)
+    return x.reshape(tiles_y * tiles_x, TILE, TILE, *extra)
+
+
+def render_from_bins(proj: ProjectedGaussians, bins: binning.TileBins,
+                     grid: TileGrid, *, impl: str = "jnp_chunked",
+                     chunk: int = 64) -> RenderOutput:
+    tg = binning.gather_tiles(proj, bins)
+    rgb_t, trans_t, d_t, td_t, proc = kops.raster_tiles(
+        tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
+        grid.origins, bins.count, impl=impl, chunk=chunk)
+    return RenderOutput(
+        rgb=untile(rgb_t, grid.tiles_x, grid.tiles_y),
+        transmittance=untile(trans_t, grid.tiles_x, grid.tiles_y),
+        exp_depth=untile(d_t, grid.tiles_x, grid.tiles_y),
+        trunc_depth=untile(td_t, grid.tiles_x, grid.tiles_y),
+        processed_pairs=proc)
+
+
+def render_oracle(proj: ProjectedGaussians, cam: Camera) -> RenderOutput:
+    """Brute-force per-pixel blend over ALL Gaussians, depth-sorted globally.
+
+    O(H*W*N) — for small test scenes only.
+    """
+    n = proj.depth.shape[0]
+    key = jnp.where(proj.valid, proj.depth, jnp.inf)
+    order = jnp.argsort(key)
+    mean2d = proj.mean2d[order]
+    conic = proj.conic[order]
+    rgb = proj.rgb[order]
+    opac = jnp.where(proj.valid[order], proj.opacity[order], 0.0)
+    depth = proj.depth[order]
+
+    u = jnp.arange(cam.width, dtype=jnp.float32) + 0.5
+    v = jnp.arange(cam.height, dtype=jnp.float32) + 0.5
+    px, py = jnp.meshgrid(u, v, indexing="xy")
+    px, py = px.ravel(), py.ravel()
+    p = cam.width * cam.height
+
+    from repro.kernels.ref import ALPHA_MAX, ALPHA_MIN, T_EPS
+
+    def body(carry, g):
+        color, trans, done, dacc, wacc, tdepth = carry
+        m, con, c, o, d = g
+        dx = px - m[0]
+        dy = py - m[1]
+        power = -0.5 * (con[0] * dx * dx + con[2] * dy * dy) - con[1] * dx * dy
+        alpha = jnp.minimum(o * jnp.exp(power), ALPHA_MAX)
+        alpha = jnp.where(alpha >= ALPHA_MIN, alpha, 0.0)
+        test_t = trans * (1.0 - alpha)
+        trigger = (alpha > 0.0) & (test_t < T_EPS)   # sticky done (CUDA)
+        blend = (alpha > 0.0) & ~done & ~trigger
+        w = jnp.where(blend, alpha * trans, 0.0)
+        color = color + w[:, None] * c[None, :]
+        dacc = dacc + w * d
+        wacc = wacc + w
+        tdepth = jnp.where(blend, jnp.maximum(tdepth, d), tdepth)
+        trans = jnp.where(blend, test_t, trans)
+        done = done | trigger
+        return (color, trans, done, dacc, wacc, tdepth), None
+
+    init = (jnp.zeros((p, 3)), jnp.ones((p,)), jnp.zeros((p,), bool),
+            jnp.zeros((p,)), jnp.zeros((p,)), jnp.zeros((p,)))
+    (color, trans, done, dacc, wacc, tdepth), _ = jax.lax.scan(
+        body, init, (mean2d, conic, rgb, opac, depth))
+    h, w = cam.height, cam.width
+    n_tiles = (h // TILE) * (w // TILE)
+    return RenderOutput(
+        rgb=color.reshape(h, w, 3), transmittance=trans.reshape(h, w),
+        exp_depth=(dacc / jnp.maximum(wacc, 1e-8)).reshape(h, w),
+        trunc_depth=tdepth.reshape(h, w),
+        processed_pairs=jnp.zeros((n_tiles,), jnp.int32))

@@ -1,0 +1,190 @@
+"""Sharding rules: param/optimizer/cache/input PartitionSpecs.
+
+Strategy (DESIGN.md §5): 2-D sharded weights — contraction/feature dim over
+"model" (TP), the other large dim over "data" (FSDP/ZeRO-3); experts over
+"model" (EP); batch over ("pod","data"); KV caches shard batch over "data"
+and heads over "model" when divisible, falling back to sequence sharding
+for batch-1 long-context decode (flash-decoding style).
+
+Rules are name-based over the param tree (the last dict key identifies the
+leaf; stacked layer dims are detected by rank and get a leading None).
+Every axis is divisibility-checked against the mesh — a non-divisible dim
+degrades to replication rather than failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+# name -> spec template over the UNSTACKED rank. "F" = fsdp axis ("data"),
+# "M" = tensor axis ("model"), None = replicate.
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed": ("M", "F"),
+    "lm_head": ("F", "M"),
+    "vision_proj": ("F", "M"),
+    # attention (GQA + shared/cross variants share names)
+    "wq": ("F", "M", None),
+    "wk": ("F", "M", None),
+    "wv": ("F", "M", None),
+    "wo": ("M", None, "F"),
+    # MLA
+    "w_dq": ("F", None),
+    "w_uq": (None, "M", None),
+    "w_dkv": ("F", None),
+    "w_kr": ("F", None),
+    "w_uk": (None, "M", None),
+    "w_uv": (None, "M", None),
+    # dense MLP (rank 2) / MoE experts (rank 3, leading E) disambiguated
+    # by rank in _spec_for.
+    "w_in": ("F", "M"),
+    "w_gate": ("F", "M"),
+    "w_out": ("M", "F"),
+    "router": ("F", None),
+    # mamba
+    "conv_w": ("M", None),
+    "conv_b": ("M",),
+    "a_log": (None,),
+    "d_skip": (None,),
+    "dt_bias": (None,),
+    "out_norm": (None,),
+    # norms / scalars
+    "ln1": (None,), "ln2": (None,), "ln_x": (None,),
+    "final_norm": (None,), "enc_final_norm": (None,),
+    "q_norm": (None,), "kv_norm": (None,),
+    "step": (),
+}
+
+_MOE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # experts over "model" (EP), d/f over "data" (FSDP)
+    "w_in": ("M", "F", None),
+    "w_gate": ("M", "F", None),
+    "w_out": ("M", "F", None),
+}
+
+
+def fsdp_axis(mesh: Mesh) -> Any:
+    return "data"
+
+
+def batch_axes(mesh: Mesh) -> Any:
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _axis_ok(mesh: Mesh, axis: Optional[str], dim: int) -> Optional[str]:
+    if axis is None:
+        return None
+    name = {"F": "data", "M": "model"}[axis]
+    size = mesh.shape[name]
+    return name if dim % size == 0 else None
+
+
+def _path_keys(path):
+    for p in path:
+        key = getattr(p, "key", None)
+        if key is None:
+            key = getattr(p, "name", None)   # NamedTuple fields
+        if key is None:
+            key = getattr(p, "idx", None)    # sequences
+        yield key
+
+
+def _spec_for(path, leaf, mesh: Mesh) -> P:
+    name = None
+    in_moe = False
+    for key in _path_keys(path):
+        if key in ("moe",):
+            in_moe = True
+        if key == "shared":
+            in_moe = False  # shared expert is a plain MLP
+        if key is not None and not isinstance(key, int):
+            name = key
+    if name not in _PARAM_RULES and name not in _MOE_RULES:
+        raise KeyError(f"no sharding rule for param {name!r} "
+                       f"(path {jax.tree_util.keystr(path)})")
+    rule = _PARAM_RULES.get(name, ())
+    if in_moe and name in _MOE_RULES and leaf.ndim >= 3:
+        rule = _MOE_RULES[name]
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    if ndim == len(rule) + 1:        # stacked layer/group leading dim
+        rule = (None,) + rule
+    elif ndim == len(rule) + 2:      # zamba grouped stacking (G, k, ...)
+        rule = (None, None) + rule
+    elif ndim != len(rule):
+        raise ValueError(f"rank mismatch for {name}: rule {rule}, "
+                         f"shape {leaf.shape}")
+    axes = tuple(_axis_ok(mesh, a, leaf.shape[i])
+                 for i, a in enumerate(rule))
+    return P(*axes)
+
+
+def param_shardings(tree, mesh: Mesh):
+    """NamedSharding pytree congruent with any params/opt-state tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, _spec_for(path, leaf, mesh)),
+        tree)
+
+
+# ---------------------------------------------------------------------------
+# inputs / caches
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """tokens/labels (B, S) and stub embeddings (B, T, D): batch over the
+    data axes when divisible, replicate otherwise (batch-1 decode)."""
+    baxes = batch_axes(mesh)
+    dsize = np.prod([mesh.shape[a] for a in
+                     (baxes if isinstance(baxes, tuple) else (baxes,))])
+
+    def spec(leaf):
+        b = leaf.shape[0]
+        lead = baxes if b % dsize == 0 else None
+        return NamedSharding(mesh, P(lead, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(spec, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """KV caches: (L, B, G, S, K) — batch over "data" when divisible, else
+    the SEQUENCE axis is sharded over "data" (flash-decoding layout for
+    long_500k). Heads over "model" when divisible. SSM states: heads over
+    "model". MLA latent caches: batch over "data", latent replicated."""
+    def spec(leaf):
+        shape = leaf.shape
+        nd = leaf.ndim
+        data = mesh.shape["data"]
+        model = mesh.shape["model"]
+        if nd == 5:    # (L, B, G, S, K) kv cache
+            if shape[1] % data == 0:
+                return NamedSharding(mesh, P(
+                    None, "data",
+                    "model" if shape[2] % model == 0 else None, None, None))
+            return NamedSharding(mesh, P(
+                None, None, "model" if shape[2] % model == 0 else None,
+                "data" if shape[3] % data == 0 else None, None))
+        if nd == 4:    # (L, B, S, C) MLA latent / (L, B, conv_dim, W)
+            if shape[1] % data == 0:
+                return NamedSharding(mesh, P(None, "data", None, None))
+            # batch-1 long context: shard MLA seq axis over data
+            return NamedSharding(mesh, P(
+                None, None, "data" if shape[2] % data == 0 else None, None))
+        if nd == 3:    # (B, enc_seq, D) encoder output
+            return NamedSharding(mesh, P(
+                "data" if shape[0] % data == 0 else None, None, None))
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        # ssm state (L, B, H, P, N) handled by nd==5 above; fallback:
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map(spec, cache_tree)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, P(*([None] * getattr(leaf, "ndim", 0)))), tree)

@@ -1,0 +1,128 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Every op takes ``impl`` selecting between:
+  - "pallas"      : the Pallas kernel (interpret=True on CPU, compiled on TPU)
+  - "jnp_chunked" : vectorized pure-jnp path with identical chunked math —
+                    the fast CPU execution path used by benchmarks
+  - "ref"         : the sequential oracle (kernels/ref.py)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import TILE
+from repro.kernels import ref as ref_kernels
+from repro.kernels.raster_tile import (ALPHA_MAX, ALPHA_MIN, T_EPS,
+                                       raster_tiles_pallas)
+from repro.kernels.preprocess import preprocess_geom_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _raster_tile_chunked_jnp(mean2d, conic, rgb, opacity, depth, origin,
+                             count, *, chunk: int, tile: int):
+    """One tile, chunked math identical to the Pallas kernel, pure jnp."""
+    k = opacity.shape[0]
+    ii = jnp.arange(tile, dtype=jnp.float32)
+    py_g, px_g = jnp.meshgrid(ii, ii, indexing="ij")
+    px = px_g.ravel() + origin[0] + 0.5
+    py = py_g.ravel() + origin[1] + 0.5
+    p = tile * tile
+
+    def body(carry, sl):
+        c_acc, t_run, done, d_acc, w_acc, td_max, n_alive = carry
+        alive = jnp.any(~done)
+        mx, my = sl["m"][:, 0], sl["m"][:, 1]
+        ca, cb, cc = sl["c"][:, 0], sl["c"][:, 1], sl["c"][:, 2]
+        dx = px[:, None] - mx[None, :]
+        dy = py[:, None] - my[None, :]
+        power = (-0.5 * (ca[None] * dx * dx + cc[None] * dy * dy)
+                 - cb[None] * dx * dy)
+        alpha = jnp.minimum(sl["o"][None, :] * jnp.exp(power), ALPHA_MAX)
+        alpha = jnp.where(alpha >= ALPHA_MIN, alpha, 0.0)
+        cp = jnp.cumprod(1.0 - alpha, axis=1)
+        tp = t_run[:, None] * cp
+        t_before = t_run[:, None] * jnp.concatenate(
+            [jnp.ones_like(cp[:, :1]), cp[:, :-1]], axis=1)
+        blend = (tp >= T_EPS) & (~done[:, None])    # sticky done, see kernel
+        w = jnp.where(blend, alpha * t_before, 0.0)
+        c_acc = c_acc + w @ sl["rgb"]
+        d_acc = d_acc + jnp.sum(w * sl["d"][None, :], axis=1)
+        w_acc = w_acc + jnp.sum(w, axis=1)
+        td_max = jnp.maximum(td_max, jnp.max(
+            jnp.where(blend & (alpha > 0.0), sl["d"][None, :], 0.0), axis=1))
+        t_run = jnp.min(jnp.where(blend, tp, t_run[:, None]), axis=1)
+        done = done | (tp[:, -1] < T_EPS)
+        n_alive = n_alive + alive.astype(jnp.int32)
+        return (c_acc, t_run, done, d_acc, w_acc, td_max, n_alive), None
+
+    n_chunks = k // chunk
+    xs = {
+        "m": mean2d.reshape(n_chunks, chunk, 2),
+        "c": conic.reshape(n_chunks, chunk, 3),
+        "rgb": rgb.reshape(n_chunks, chunk, 3),
+        "o": opacity.reshape(n_chunks, chunk),
+        "d": depth.reshape(n_chunks, chunk),
+    }
+    init = (jnp.zeros((p, 3)), jnp.ones((p,)), jnp.zeros((p,), bool),
+            jnp.zeros((p,)), jnp.zeros((p,)), jnp.zeros((p,)), jnp.int32(0))
+    (c_acc, t_run, done, d_acc, w_acc, td_max, n_alive), _ = jax.lax.scan(
+        body, init, xs)
+    processed = jnp.minimum(n_alive * chunk, count).astype(jnp.int32)
+    return (c_acc.reshape(tile, tile, 3), t_run.reshape(tile, tile),
+            (d_acc / jnp.maximum(w_acc, 1e-8)).reshape(tile, tile),
+            td_max.reshape(tile, tile), processed)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "tile"))
+def raster_tiles(mean2d, conic, rgb, opacity, depth, origins, counts,
+                 *, impl: str = "jnp_chunked", chunk: int = 64,
+                 tile: int = TILE):
+    """Rasterize every tile: inputs (T, K, ...) -> 5 outputs.
+
+    Returns (rgb, transmittance, expected_depth, truncated_depth,
+    processed_pairs) — the last is (T,) int32 pairs traversed before the
+    early-stop exit (chunk-granular for pallas/jnp_chunked, exact for ref).
+    """
+    if impl == "pallas":
+        return raster_tiles_pallas(mean2d, conic, rgb, opacity, depth,
+                                   origins, counts, chunk=chunk, tile=tile,
+                                   interpret=not _on_tpu())
+    if impl == "jnp_chunked":
+        fn = functools.partial(_raster_tile_chunked_jnp, chunk=chunk, tile=tile)
+        return jax.vmap(fn)(mean2d, conic, rgb, opacity, depth, origins,
+                            counts)
+    if impl == "ref":
+        return ref_kernels.raster_tiles_ref(mean2d, conic, rgb, opacity,
+                                            depth, origins, tile=tile)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def _preprocess_geom_pallas_jit(means, log_scales, quats, opacity, w2c,
+                                intrin, *, block_n: int):
+    return preprocess_geom_pallas(means, log_scales, quats, opacity, w2c,
+                                  intrin, block_n=block_n,
+                                  interpret=not _on_tpu())
+
+
+def preprocess_geom(means, log_scales, quats, opacity, w2c, intrin,
+                    *, impl: str = "pallas", block_n: int = 256):
+    """Fused CCU preprocess. See kernels/preprocess.py for outputs.
+
+    ``impl="ref"`` requires concrete (non-traced) ``intrin`` since the
+    oracle builds a static Camera; it is meant for tests.
+    """
+    if impl == "pallas":
+        return _preprocess_geom_pallas_jit(means, log_scales, quats, opacity,
+                                           w2c, intrin, block_n=block_n)
+    if impl == "ref":
+        return ref_kernels.preprocess_geom_ref(means, log_scales, quats,
+                                               opacity, w2c, intrin)
+    raise ValueError(f"unknown impl {impl!r}")

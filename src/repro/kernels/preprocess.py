@@ -1,0 +1,173 @@
+"""Pallas TPU kernel for the fused preprocess stage (the paper's CCU).
+
+LS-Gaussian's CCU replaces GSCore's dual OBB-intersection units with one
+sqrt + log operator (paper Sec. V-A / VI-A); this kernel is the TPU
+realization: a single fused pass per Gaussian computing camera transform,
+EWA projection, conic, eigen-decomposition, the classic 3-sigma radius and
+TAIT's opacity-aware radii + tight bbox (eqs. 4 and 6).
+
+Blocked over N (BLOCK_N Gaussians per grid step); the camera is a tiny
+(4,4) + (8,) operand replicated to every block. Pure VPU math — one exp/log
+and two sqrt per Gaussian, exactly the operator budget the paper's CCU adds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ALPHA_THRESHOLD = 1.0 / 255.0
+BLOCK_N = 256
+
+
+def _preproc_kernel(means_ref, scales_ref, quats_ref, opac_ref,
+                    w2c_ref, intrin_ref,
+                    mean2d_out, conic_out, depth_out, aux_out, minor_out,
+                    *, dilation: float, near: float, frustum_margin: float):
+    means = means_ref[...]                     # (B, 3)
+    log_scales = scales_ref[...]               # (B, 3)
+    quats = quats_ref[...]                     # (B, 4)
+    opac = opac_ref[...]                       # (B,)
+    w2c = w2c_ref[...]                         # (4, 4)
+    fx, fy, cx, cy = (intrin_ref[0], intrin_ref[1], intrin_ref[2],
+                      intrin_ref[3])
+    width, height = intrin_ref[4], intrin_ref[5]
+
+    rot = w2c[:3, :3]
+    t = w2c[:3, 3]
+    p_cam = means @ rot.T + t                  # (B, 3)
+    z = p_cam[:, 2]
+    safe_z = jnp.maximum(z, near)
+    u = fx * p_cam[:, 0] / safe_z + cx
+    v = fy * p_cam[:, 1] / safe_z + cy
+
+    # Quaternion -> rotation, R S: world covariance = (RS)(RS)^T.
+    qn = quats / jnp.sqrt(jnp.sum(quats * quats, axis=1, keepdims=True) + 1e-12)
+    qw, qx, qy, qz = qn[:, 0], qn[:, 1], qn[:, 2], qn[:, 3]
+    s = jnp.exp(log_scales)                    # (B, 3)
+    r00 = 1 - 2 * (qy * qy + qz * qz)
+    r01 = 2 * (qx * qy - qw * qz)
+    r02 = 2 * (qx * qz + qw * qy)
+    r10 = 2 * (qx * qy + qw * qz)
+    r11 = 1 - 2 * (qx * qx + qz * qz)
+    r12 = 2 * (qy * qz - qw * qx)
+    r20 = 2 * (qx * qz - qw * qy)
+    r21 = 2 * (qy * qz + qw * qx)
+    r22 = 1 - 2 * (qx * qx + qy * qy)
+    # M = R_g diag(s): rows of world-rotation scaled by s columns.
+    m_rows = [
+        jnp.stack([r00 * s[:, 0], r01 * s[:, 1], r02 * s[:, 2]], -1),
+        jnp.stack([r10 * s[:, 0], r11 * s[:, 1], r12 * s[:, 2]], -1),
+        jnp.stack([r20 * s[:, 0], r21 * s[:, 1], r22 * s[:, 2]], -1),
+    ]
+    m3 = jnp.stack(m_rows, 1)                  # (B, 3, 3)
+    cov3d = m3 @ jnp.swapaxes(m3, 1, 2)        # (B, 3, 3)
+
+    lim_x = frustum_margin * width / (2.0 * fx)
+    lim_y = frustum_margin * height / (2.0 * fy)
+    tx = jnp.clip(p_cam[:, 0] / safe_z, -lim_x, lim_x) * safe_z
+    ty = jnp.clip(p_cam[:, 1] / safe_z, -lim_y, lim_y) * safe_z
+    inv_z = 1.0 / safe_z
+    inv_z2 = inv_z * inv_z
+    zero = jnp.zeros_like(inv_z)
+    j0 = jnp.stack([fx * inv_z, zero, -fx * tx * inv_z2], -1)   # (B, 3)
+    j1 = jnp.stack([zero, fy * inv_z, -fy * ty * inv_z2], -1)
+    jm = jnp.stack([j0, j1], 1)                # (B, 2, 3)
+    mw = jm @ rot[None]                        # (B, 2, 3)
+    cov2d = mw @ cov3d @ jnp.swapaxes(mw, 1, 2)  # (B, 2, 2)
+    a = cov2d[:, 0, 0] + dilation
+    b = cov2d[:, 0, 1]
+    c = cov2d[:, 1, 1] + dilation
+
+    det = a * c - b * b
+    det_safe = jnp.maximum(det, 1e-12)
+    con_a = c / det_safe
+    con_b = -b / det_safe
+    con_c = a / det_safe
+
+    mid = 0.5 * (a + c)
+    half_diff = 0.5 * (a - c)
+    disc = jnp.sqrt(jnp.maximum(half_diff * half_diff + b * b, 1e-12))
+    lam1 = mid + disc
+    lam2 = jnp.maximum(mid - disc, 1e-8)
+    ex = jnp.where(jnp.abs(b) > 1e-12, b, jnp.where(a <= c, 1.0, 0.0))
+    ey = jnp.where(jnp.abs(b) > 1e-12, lam2 - a, jnp.where(a <= c, 0.0, 1.0))
+    en = jnp.sqrt(ex * ex + ey * ey) + 1e-12
+
+    radius3 = jnp.ceil(3.0 * jnp.sqrt(lam1))
+    log_ratio = jnp.log(jnp.maximum(opac / ALPHA_THRESHOLD, 1.0 + 1e-6))
+    r_major = jnp.sqrt(2.0 * log_ratio * lam1)
+    r_minor = jnp.sqrt(2.0 * log_ratio * lam2)
+    half_w = jnp.sqrt(jnp.maximum(a / lam1, 0.0)) * r_major
+    half_h = jnp.sqrt(jnp.maximum(c / lam1, 0.0)) * r_major
+
+    in_front = z > near
+    visible = opac > ALPHA_THRESHOLD
+    on_screen = ((u + radius3 > 0) & (u - radius3 < width)
+                 & (v + radius3 > 0) & (v - radius3 < height))
+    valid = in_front & visible & on_screen & (det > 1e-12)
+
+    mean2d_out[...] = jnp.stack([u, v], -1)
+    conic_out[...] = jnp.stack([con_a, con_b, con_c], -1)
+    depth_out[...] = z
+    aux_out[...] = jnp.stack([radius3, r_major, r_minor, half_w, half_h,
+                              valid.astype(jnp.float32)], -1)
+    minor_out[...] = jnp.stack([ex / en, ey / en], -1)
+
+
+def preprocess_geom_pallas(means, log_scales, quats, opacity, w2c, intrin,
+                           *, dilation: float = 0.3, near: float = 0.05,
+                           frustum_margin: float = 1.3,
+                           block_n: int = BLOCK_N, interpret: bool = True):
+    """Fused preprocess over N Gaussians (padded to block_n).
+
+    Returns mean2d (N,2), conic (N,3), depth (N,), aux (N,6), minor (N,2)
+    with aux = [radius3, r_major, r_minor, half_w, half_h, valid].
+    """
+    n = means.shape[0]
+    n_pad = (n + block_n - 1) // block_n * block_n
+    pad = n_pad - n
+
+    def padn(x):
+        cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, cfg)
+
+    f32 = jnp.float32
+    means_p = padn(means.astype(f32))
+    scales_p = padn(log_scales.astype(f32))
+    quats_p = padn(quats.astype(f32)).at[n:, 0].set(1.0) if pad else padn(quats.astype(f32))
+    opac_p = padn(opacity.astype(f32))
+
+    kernel = functools.partial(_preproc_kernel, dilation=dilation, near=near,
+                               frustum_margin=frustum_margin)
+    grid = (n_pad // block_n,)
+    out_shapes = (
+        jax.ShapeDtypeStruct((n_pad, 2), f32),
+        jax.ShapeDtypeStruct((n_pad, 3), f32),
+        jax.ShapeDtypeStruct((n_pad,), f32),
+        jax.ShapeDtypeStruct((n_pad, 6), f32),
+        jax.ShapeDtypeStruct((n_pad, 2), f32),
+    )
+    in_specs = [
+        pl.BlockSpec((block_n, 3), lambda i: (i, 0)),
+        pl.BlockSpec((block_n, 3), lambda i: (i, 0)),
+        pl.BlockSpec((block_n, 4), lambda i: (i, 0)),
+        pl.BlockSpec((block_n,), lambda i: (i,)),
+        pl.BlockSpec((4, 4), lambda i: (0, 0)),   # camera: replicated
+        pl.BlockSpec((6,), lambda i: (0,)),
+    ]
+    out_specs = (
+        pl.BlockSpec((block_n, 2), lambda i: (i, 0)),
+        pl.BlockSpec((block_n, 3), lambda i: (i, 0)),
+        pl.BlockSpec((block_n,), lambda i: (i,)),
+        pl.BlockSpec((block_n, 6), lambda i: (i, 0)),
+        pl.BlockSpec((block_n, 2), lambda i: (i, 0)),
+    )
+    outs = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shapes, interpret=interpret,
+    )(means_p, scales_p, quats_p, opac_p,
+      jnp.asarray(w2c, f32), jnp.asarray(intrin, f32))
+    return tuple(o[:n] for o in outs)

@@ -1,0 +1,128 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Semantics match the reference 3DGS CUDA rasterizer exactly:
+  - per-Gaussian alpha = min(0.99, opacity * exp(power)); skipped (no state
+    update) when alpha < 1/255;
+  - front-to-back blending, and a pixel is *done* at the first Gaussian
+    whose blend would push transmittance below 1e-4 — that Gaussian is NOT
+    blended (the CUDA code `continue`s before accumulating);
+  - outputs: blended rgb, final transmittance, normalized opacity-weighted
+    expected depth (the paper's real-time depth estimate, Sec. IV-A) and
+    the truncated depth (depth of the last blended Gaussian, Sec. IV-B).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import TILE
+
+ALPHA_MIN = 1.0 / 255.0
+ALPHA_MAX = 0.99
+T_EPS = 1e-4
+
+
+def _pixel_coords(origin: jax.Array, tile: int = TILE) -> Tuple[jax.Array, jax.Array]:
+    """Pixel-center coords of one tile. origin: (2,) -> (tile*tile,) each."""
+    ii = jnp.arange(tile, dtype=jnp.float32)
+    py, px = jnp.meshgrid(ii, ii, indexing="ij")
+    px = px.ravel() + origin[0] + 0.5
+    py = py.ravel() + origin[1] + 0.5
+    return px, py
+
+
+def raster_tile_ref(mean2d: jax.Array, conic: jax.Array, rgb: jax.Array,
+                    opacity: jax.Array, depth: jax.Array, origin: jax.Array,
+                    *, tile: int = TILE):
+    """Rasterize ONE tile by sequential scan over its K sorted Gaussians.
+
+    mean2d (K,2), conic (K,3), rgb (K,3), opacity (K,), depth (K,),
+    origin (2,). Invalid entries must have opacity == 0.
+    Returns rgb (tile,tile,3), trans (tile,tile), exp_depth (tile,tile),
+    trunc_depth (tile,tile).
+    """
+    px, py = _pixel_coords(origin, tile)
+    p = tile * tile
+
+    def body(carry, g):
+        color, trans, done, dacc, wacc, tdepth, n_proc = carry
+        m, con, c, o, d = g
+        # Tile-level traversal work: this entry is processed if it is a real
+        # (non-padding) pair and at least one pixel is still alive.
+        alive_any = jnp.any(~done)
+        n_proc = n_proc + (alive_any & (o > 0.0)).astype(jnp.int32)
+        dx = px - m[0]
+        dy = py - m[1]
+        power = -0.5 * (con[0] * dx * dx + con[2] * dy * dy) - con[1] * dx * dy
+        alpha = jnp.minimum(o * jnp.exp(power), ALPHA_MAX)
+        alpha = jnp.where(alpha >= ALPHA_MIN, alpha, 0.0)
+        test_t = trans * (1.0 - alpha)
+        # CUDA semantics: the `done` flag is STICKY — the gaussian that
+        # would push T below 1e-4 is dropped and the pixel never blends
+        # again, even for later tiny alphas.
+        trigger = (alpha > 0.0) & (test_t < T_EPS)
+        blend = (alpha > 0.0) & ~done & ~trigger
+        w = jnp.where(blend, alpha * trans, 0.0)
+        color = color + w[:, None] * c[None, :]
+        dacc = dacc + w * d
+        wacc = wacc + w
+        tdepth = jnp.where(blend, jnp.maximum(tdepth, d), tdepth)
+        trans = jnp.where(blend, test_t, trans)
+        done = done | trigger
+        return (color, trans, done, dacc, wacc, tdepth, n_proc), None
+
+    init = (jnp.zeros((p, 3)), jnp.ones((p,)), jnp.zeros((p,), bool),
+            jnp.zeros((p,)), jnp.zeros((p,)), jnp.zeros((p,)), jnp.int32(0))
+    (color, trans, done, dacc, wacc, tdepth, n_proc), _ = jax.lax.scan(
+        init=init, xs=(mean2d, conic, rgb, opacity, depth), f=body)
+    exp_depth = dacc / jnp.maximum(wacc, 1e-8)
+    shape = (tile, tile)
+    return (color.reshape(tile, tile, 3), trans.reshape(shape),
+            exp_depth.reshape(shape), tdepth.reshape(shape), n_proc)
+
+
+def raster_tiles_ref(mean2d, conic, rgb, opacity, depth, origins, *, tile: int = TILE):
+    """vmap of ``raster_tile_ref`` over tiles: inputs (T, K, ...) -> (T, tile, tile, ...)."""
+    fn = lambda m, co, c, o, d, org: raster_tile_ref(m, co, c, o, d, org, tile=tile)
+    return jax.vmap(fn)(mean2d, conic, rgb, opacity, depth, origins)
+
+
+def preprocess_geom_ref(means, log_scales, quats, opacity, w2c, intrin, *,
+                        dilation: float = 0.3, near: float = 0.05,
+                        frustum_margin: float = 1.3):
+    """Oracle for the fused CCU preprocess kernel (geometry only, no SH).
+
+    means (N,3), log_scales (N,3), quats (N,4), opacity (N,), w2c (4,4),
+    intrin (6,) = [fx, fy, cx, cy, width, height].
+    Returns mean2d (N,2), conic (N,3), depth (N,), aux (N,6) =
+    [radius3, r_major, r_minor, half_w, half_h, valid], minor_axis (N,2).
+    Mirrors core/projection.py::preprocess — kept separate so the kernel has
+    a self-contained oracle over raw arrays.
+    """
+    from repro.core.gaussians import GaussianScene
+    from repro.core.projection import preprocess
+    from repro.core.camera import Camera
+
+    fx, fy, cx, cy, w, h = [float(x) for x in intrin]
+    sh = jnp.zeros((means.shape[0], 1, 3), means.dtype)
+    logit = jnp.log(opacity / jnp.maximum(1.0 - opacity, 1e-8))
+    scene = GaussianScene(means, log_scales, quats, logit, sh)
+    cam = Camera(w2c=w2c, fx=fx, fy=fy, cx=cx, cy=cy, width=int(w), height=int(h))
+    pr = preprocess(scene, cam, near=near, frustum_margin=frustum_margin,
+                    dilation=dilation)
+    aux = jnp.stack([pr.radius3, pr.r_major, pr.r_minor,
+                     pr.tight_half_wh[:, 0], pr.tight_half_wh[:, 1],
+                     pr.valid.astype(means.dtype)], axis=-1)
+    return pr.mean2d, pr.conic, pr.depth, aux, pr.minor_axis
+
+
+def tile_sort_ref(keys: jax.Array, values: jax.Array):
+    """Oracle for the per-tile bitonic sorter: ascending sort of each row.
+
+    keys (T, K) float, values (T, K) int32. Returns sorted (keys, values).
+    """
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return jnp.take_along_axis(keys, order, axis=-1), \
+        jnp.take_along_axis(values, order, axis=-1)

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the per-tile depth sorter (the paper's GSU).
+
+Bitonic sorting network over each tile's K depth keys (with payload
+indices), one grid step per tile. K is padded to a power of two; +inf
+padding keys sink to the end, matching binning.py semantics. The network
+is data-independent — log2(K)·(log2(K)+1)/2 compare-exchange sweeps, each
+a vectorized gather + select over the (K,) lane dimension, which is how a
+streaming hardware sorter (GSCore's GSU) maps onto the VPU.
+
+Used as the in-kernel alternative to the XLA `top_k` path in binning.py;
+both are validated against `kernels/ref.py::tile_sort_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_kernel(keys_ref, vals_ref, keys_out, vals_out, *, k: int):
+    keys = keys_ref[0, :]
+    vals = vals_ref[0, :]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (k, 1), 0)[:, 0]
+
+    span = 2
+    while span <= k:
+        stride = span // 2
+        while stride >= 1:
+            partner = idx ^ stride
+            pk = keys[partner]
+            pv = vals[partner]
+            # ascending iff the span-block index is even
+            up = (idx & span) == 0
+            is_low = partner > idx
+            swap = jnp.where(is_low, keys > pk, keys < pk)
+            swap = jnp.where(up, swap, ~swap)
+            keys = jnp.where(swap, pk, keys)
+            vals = jnp.where(swap, pv, vals)
+            stride //= 2
+        span *= 2
+
+    keys_out[0, :] = keys
+    vals_out[0, :] = vals
+
+
+def tile_sort_pallas(keys: jax.Array, values: jax.Array, *,
+                     interpret: bool = True):
+    """Sort each row ascending. keys (T, K) f32, values (T, K) i32.
+
+    K is padded to the next power of two with +inf keys (dropped on
+    return)."""
+    t, k = keys.shape
+    k_pad = 1
+    while k_pad < k:
+        k_pad *= 2
+    if k_pad != k:
+        keys = jnp.pad(keys, ((0, 0), (0, k_pad - k)),
+                       constant_values=jnp.inf)
+        values = jnp.pad(values, ((0, 0), (0, k_pad - k)),
+                         constant_values=-1)
+
+    kernel = functools.partial(_bitonic_kernel, k=k_pad)
+    out_k, out_v = pl.pallas_call(
+        kernel,
+        grid=(t,),
+        in_specs=[pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((1, k_pad), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k_pad), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((t, k_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((t, k_pad), jnp.int32)),
+        interpret=interpret,
+    )(keys.astype(jnp.float32), values.astype(jnp.int32))
+    return out_k[:, :k], out_v[:, :k]

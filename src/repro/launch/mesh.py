@@ -1,0 +1,17 @@
+"""Production mesh builders (function, not module constant — importing this
+module must never touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Small mesh over host devices for tests (subprocess sets device count)."""
+    return jax.make_mesh((data, model), ("data", "model"))

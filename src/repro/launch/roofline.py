@@ -1,0 +1,320 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e-like, fixed constants):
+  peak        197 TFLOP/s bf16 per chip
+  HBM         819 GB/s per chip
+  ICI         ~50 GB/s per link
+
+Three terms per (arch x shape x mesh):
+  compute    = HLO_FLOPs / (chips * peak)
+  memory     = HLO_bytes / (chips * hbm_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+IMPORTANT CAVEAT + CORRECTION: XLA's HloCostAnalysis visits a while-loop
+body ONCE — scanned layer stacks are undercounted by ~L x. We correct by
+compiling each cell at two extra scan lengths (same dims, L1 < L2 layers)
+and extrapolating: per_unit = (cost(L2) - cost(L1)) / (units2 - units1);
+corrected(L) = cost(L1) + (units(L) - units1) * per_unit. The same
+correction applies to collective bytes (collectives inside the scanned
+body execute once per layer). Raw and corrected values are both reported.
+
+MODEL_FLOPS = 6*N*D for training (2*N*D inference) with N = active params
+(MoE) plus causal attention-score FLOPs; the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "artifacts")
+
+
+def _correction_layers(cfg) -> Optional[Tuple[int, int, int, int, int]]:
+    """(L1, L2, units1, units2, units_full) for the 2-point correction."""
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        tail = cfg.num_layers - (cfg.num_layers // k) * k
+        return (k + tail, 2 * k + tail, 1, 2, cfg.num_layers // k)
+    return (1, 2, 1, 2, cfg.num_layers)
+
+
+def corrected_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                   hook_overrides=None, cfg_override=None,
+                   tag: str = "") -> Dict[str, Any]:
+    """Run full cell + two mini-compiles; emit corrected roofline terms."""
+    import dataclasses as dc
+
+    from repro.configs import get_config
+    from repro.launch import dryrun
+
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    full = dryrun.run_cell(arch, shape_name, multi_pod=multi_pod,
+                           hook_overrides=hook_overrides,
+                           cfg_override=cfg, tag=tag)
+    if full["status"] != "ok":
+        return full
+
+    corr = _correction_layers(cfg)
+    l1, l2, u1, u2, units_full = corr
+
+    # Prefill normally runs flash attention, whose nested kv-chunk
+    # while-loops are ALSO cost-counted once; the minis therefore lower
+    # the materialized-softmax path (identical matmul FLOPs to the full
+    # S x T flash rectangle) so the per-layer diff is complete. Bytes from
+    # sdpa minis overstate flash's true footprint — mem_hlo is already
+    # documented as a pre-fusion upper bound.
+    mini_hooks = dict(hook_overrides or {})
+    shape_obj = None
+    from repro.configs import get_shape as _gs
+    shape_obj = _gs(shape_name)
+    if shape_obj.kind == "prefill":
+        mini_hooks.setdefault("attn_impl", "sdpa")
+
+    def mini(n_layers):
+        # scan_layers=False: while-loop bodies are cost-counted ONCE by
+        # HloCostAnalysis, so the minis must be UNROLLED for the 2-point
+        # diff to see per-layer cost.
+        c = dc.replace(cfg, num_layers=n_layers, scan_layers=False,
+                       encoder_layers=min(cfg.encoder_layers, 1))
+        r = dryrun.run_cell(arch, shape_name, multi_pod=multi_pod,
+                            save=False, hook_overrides=mini_hooks,
+                            cfg_override=c, tag="mini")
+        return r
+
+    def mini_enc(n_enc):
+        c = dc.replace(cfg, num_layers=l1, scan_layers=False,
+                       encoder_layers=n_enc)
+        return dryrun.run_cell(arch, shape_name, multi_pod=multi_pod,
+                               save=False, hook_overrides=mini_hooks,
+                               cfg_override=c, tag="mini")
+
+    r1, r2 = mini(l1), mini(l2)
+    r_enc = mini_enc(2) if cfg.encoder_layers > 1 else None
+    if r1["status"] == "ok" and r2["status"] == "ok" and \
+            (r_enc is None or r_enc["status"] == "ok"):
+        def extrapolate(key):
+            def per_unit(a, b):
+                return (b - a) / (u2 - u1)
+
+            def enc_delta(a_val, e_val):
+                # encoder diff: (enc=2) - (enc=1) at fixed decoder L1
+                return (e_val - a_val) * (cfg.encoder_layers - 1) \
+                    if r_enc is not None else 0.0
+
+            if not isinstance(r1[key], dict):
+                base = r1[key] + (units_full - u1) * per_unit(r1[key],
+                                                              r2[key])
+                return base + enc_delta(r1[key],
+                                        r_enc[key] if r_enc else 0.0)
+            out = {}
+            for k in r1[key]:
+                base = r1[key][k] + (units_full - u1) * per_unit(
+                    r1[key][k], r2[key][k])
+                out[k] = base + enc_delta(r1[key][k],
+                                          r_enc[key][k] if r_enc else 0.0)
+            return out
+
+        full["flops_corrected"] = extrapolate("flops")
+        full["bytes_corrected"] = extrapolate("bytes_accessed")
+        full["collective_bytes_corrected"] = extrapolate("collective_bytes")
+    else:
+        full["correction_error"] = r1.get("error") or r2.get("error") or \
+            (r_enc or {}).get("error")
+    _write(full)
+    return full
+
+
+def _write(result: Dict[str, Any]) -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    tag = ("_" + result["tag"]) if result.get("tag") else ""
+    name = (f"roofline_{result['arch']}_{result['shape']}_"
+            f"{result['mesh']}{tag}.json")
+    with open(os.path.join(ARTIFACT_DIR, name), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for the cell (global, per step)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        base = 6.0 * n_active * shape.tokens
+        attn = _attn_flops(cfg, shape.seq_len, shape.tokens, train=True)
+    elif shape.kind == "prefill":
+        base = 2.0 * n_active * shape.tokens
+        attn = _attn_flops(cfg, shape.seq_len, shape.tokens, train=False)
+    else:  # decode: one token per sequence
+        toks = shape.global_batch
+        base = 2.0 * n_active * toks
+        attn = _decode_attn_flops(cfg, shape.seq_len, toks)
+    return base + attn
+
+
+def _attn_flops(cfg, seq, tokens, *, train: bool) -> float:
+    """Causal QK^T + PV matmul FLOPs (0.5 triangle), fwd(+bwd)."""
+    if cfg.attention == "none":
+        return 0.0
+    hd = cfg.resolved_head_dim
+    if cfg.attention == "mla":
+        hd = cfg.nope_head_dim + cfg.rope_head_dim
+    heads = cfg.num_heads
+    layers = cfg.num_layers if cfg.family != "hybrid" \
+        else cfg.num_layers // max(cfg.shared_attn_every, 1)
+    per_tok = 2.0 * 2.0 * heads * hd * (seq / 2.0)
+    mult = 3.0 if train else 1.0   # bwd of the two matmuls ~ 2x fwd
+    return per_tok * tokens * layers * mult
+
+
+def _decode_attn_flops(cfg, cache_len, toks) -> float:
+    if cfg.attention == "none":
+        return 0.0
+    hd = cfg.resolved_head_dim
+    if cfg.attention == "mla":
+        hd = cfg.kv_lora_rank + cfg.rope_head_dim  # absorbed decode
+    heads = cfg.num_heads
+    layers = cfg.num_layers if cfg.family != "hybrid" \
+        else cfg.num_layers // max(cfg.shared_attn_every, 1)
+    return 2.0 * 2.0 * heads * hd * cache_len * toks * layers
+
+
+def memory_floor_bytes(cfg, shape, chips: int) -> float:
+    """Analytic per-device HBM-traffic floor: weights touched fwd+bwd+opt,
+    caches read/written, token activations once. HLO bytes_accessed counts
+    every op pre-fusion, so it OVERSTATES traffic; the truth lies between
+    this floor and the HLO number."""
+    n = cfg.param_count()
+    per_dev = n / chips
+    if shape.kind == "train":
+        # bf16 weights read twice (fwd+bwd) + grads written + opt state
+        # (m, v fp32) read+write + fp32 master update.
+        w = per_dev * (2 * 2 + 2 + 4 * 2 * 2 + 4 * 2)
+        acts = shape.tokens / chips * cfg.d_model * 2 * 4
+        return w + acts
+    if shape.kind == "prefill":
+        w = per_dev * 2
+        acts = shape.tokens / chips * cfg.d_model * 2 * 4
+        return w + acts
+    # decode: weights (active for MoE) + full cache read per token
+    active = cfg.active_param_count() / chips
+    hd = cfg.resolved_head_dim
+    if cfg.attention == "mla":
+        cache_row = cfg.kv_lora_rank + cfg.rope_head_dim
+    elif cfg.attention == "none":
+        cache_row = 0
+    else:
+        cache_row = 2 * cfg.num_kv_heads * hd
+    layers = cfg.num_layers if cfg.family != "hybrid" \
+        else cfg.num_layers // max(cfg.shared_attn_every, 1)
+    cache = shape.global_batch * shape.seq_len * cache_row * 2 * layers \
+        / chips
+    return active * 2 + cache
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    memory_floor_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+
+    def row(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def analyze(artifact: Dict[str, Any], chips: int) -> Roofline:
+    from repro.configs import get_config, get_shape
+
+    cfg = get_config(artifact["arch"])
+    shape = get_shape(artifact["shape"])
+    # artifacts store PER-DEVICE HLO numbers (SPMD module); roofline terms
+    # are per-device time, which is the step time at perfect overlap = 0.
+    flops = artifact.get("flops_corrected", artifact["flops"])
+    bts = artifact.get("bytes_corrected", artifact["bytes_accessed"])
+    coll = artifact.get("collective_bytes_corrected",
+                        artifact["collective_bytes"])
+    coll_total = sum(v for k, v in coll.items() if k != "counts")
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bts / HBM_BW
+    floor_s = memory_floor_bytes(cfg, shape, chips) / HBM_BW
+    collective_s = coll_total / ICI_BW
+    # bottleneck judged on the FLOOR memory estimate (HLO bytes are a
+    # pre-fusion upper bound; see module docstring).
+    terms = {"compute": compute_s, "memory": floor_s,
+             "collective": collective_s}
+    mf = model_flops(cfg, shape)
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, memory_floor_s=floor_s,
+        collective_s=collective_s,
+        bottleneck=max(terms, key=terms.get),
+        model_flops=mf,
+        useful_ratio=mf / (flops * chips) if flops > 0 else 0.0)
+
+
+def sweep(multi_pod: bool = False) -> None:
+    """Corrected-roofline pass over every applicable cell (single-pod by
+    default, per the assignment: the roofline table is single-pod)."""
+    from repro.configs import ARCH_IDS, get_config, get_shape
+    from repro.configs.base import SHAPES, shape_applicable
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for s in SHAPES:
+            ok, why = shape_applicable(cfg, s)
+            if not ok:
+                print(f"[skip] {arch} {s.name}: {why}", flush=True)
+                continue
+            r = corrected_cell(arch, s.name, multi_pod=multi_pod)
+            print(f"[{r['status']}] {arch} {s.name} "
+                  f"flops={r.get('flops_corrected', r.get('flops'))}",
+                  flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--glob", default="roofline_*.json")
+    ap.add_argument("--sweep", action="store_true")
+    args = ap.parse_args()
+    if args.sweep:
+        sweep()
+        return
+    import glob as g
+    rows = []
+    for path in sorted(g.glob(os.path.join(ARTIFACT_DIR, args.glob))):
+        art = json.load(open(path))
+        # baseline table: skip tagged variants and preserved _prev copies
+        if art.get("tag") or "_prev" in os.path.basename(path):
+            continue
+        if art.get("status") != "ok":
+            rows.append((art, None))
+            continue
+        chips = 512 if art["mesh"] == "pod2x16x16" else 256
+        rows.append((art, analyze(art, chips)))
+    hdr = (f"{'arch':27s}{'shape':13s}{'mesh':11s}{'compute_s':>11s}"
+           f"{'mem_hlo_s':>11s}{'mem_floor':>10s}{'coll_s':>9s}"
+           f"{'bound':>8s}{'useful':>8s}")
+    print(hdr)
+    for art, r in rows:
+        if r is None:
+            print(f"{art['arch']:27s}{art['shape']:13s}{art['mesh']:11s}"
+                  f"  [{art['status']}] {art.get('reason', '')[:40]}")
+            continue
+        print(f"{art['arch']:27s}{art['shape']:13s}{art['mesh']:11s}"
+              f"{r.compute_s:>11.4f}{r.memory_s:>11.4f}"
+              f"{r.memory_floor_s:>10.4f}"
+              f"{r.collective_s:>9.4f}{r.bottleneck:>8s}"
+              f"{r.useful_ratio:>8.2f}")
+
+
+if __name__ == "__main__":
+    main()

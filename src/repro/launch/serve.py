@@ -1,0 +1,92 @@
+"""Batched serving launcher: continuous decode over a request queue.
+
+Single-host reference implementation of the serving loop the decode dry-run
+cells lower: fixed-size batch slots, each slot holds an independent request;
+finished slots are refilled from the queue (continuous batching). The KV
+cache is allocated once at ``--max-seq`` and reused across requests —
+the LS-Gaussian "reuse, don't recompute" principle applied to LM serving
+(DESIGN.md §4).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as M
+
+
+def serve(cfg, *, batch_slots: int, max_seq: int, n_requests: int,
+          prompt_len: int, max_new: int, seed: int = 0) -> dict:
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    step = jax.jit(lambda p, t, c: M.decode_step(p, t, c, cfg))
+
+    rng = np.random.default_rng(seed)
+    queue = [rng.integers(0, cfg.vocab_size, prompt_len).tolist()
+             for _ in range(n_requests)]
+    done, active = [], {}
+    cache = M.init_cache(cfg, batch_slots, max_seq)
+    # per-slot progress bookkeeping (host side)
+    slot_tokens = np.zeros((batch_slots,), np.int64)
+    slot_left = np.zeros((batch_slots,), np.int64)
+    cur = np.zeros((batch_slots, 1), np.int32)
+
+    def refill():
+        for s in range(batch_slots):
+            if slot_left[s] == 0 and queue:
+                prompt = queue.pop()
+                # feed prompt token-by-token (reference loop; prefill path
+                # covers the fused variant)
+                cur[s, 0] = prompt[0]
+                slot_left[s] = len(prompt) - 1 + max_new
+                slot_tokens[s] = 0
+
+    refill()
+    t0 = time.time()
+    steps = 0
+    while np.any(slot_left > 0):
+        logits, cache = step(params, jnp.asarray(cur), cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for s in range(batch_slots):
+            if slot_left[s] > 0:
+                cur[s, 0] = nxt[s]
+                slot_left[s] -= 1
+                slot_tokens[s] += 1
+                if slot_left[s] == 0:
+                    done.append(int(slot_tokens[s]))
+        steps += 1
+        refill()
+        if steps >= max_seq - 1:
+            break
+    dt = time.time() - t0
+    total = int(np.sum(slot_tokens)) + sum(done) if not done else sum(done)
+    return {"requests_done": len(done), "decode_steps": steps,
+            "tok_per_s": total / dt if dt > 0 else 0.0,
+            "wall_s": dt}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="yi-9b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=64)
+    args = ap.parse_args()
+    cfg = get_config(args.arch).reduced()
+    out = serve(cfg, batch_slots=args.slots, max_seq=args.max_seq,
+                n_requests=args.requests, prompt_len=args.prompt_len,
+                max_new=args.max_new)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

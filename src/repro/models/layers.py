@@ -1,0 +1,666 @@
+"""Functional model components for the architecture zoo.
+
+Conventions:
+  - params are nested dicts of jnp arrays; init_* builds them, apply-style
+    functions consume them. No framework, donate/shard-friendly.
+  - activations (B, S, D); caches are explicit NamedTuples so serve_step
+    can thread them through jax.lax.scan over layers.
+  - dims named in einsums: b batch, s/t seq, d model, h heads, g kv-heads,
+    k head_dim, f ffn, e experts, c capacity/latent, n ssm-state, p
+    ssm-head-dim, q chunk.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.sharding_hooks import constrain, get_flag
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else (1.0 / (shape[0] ** 0.5))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, K) with K even; positions: (B, S) int32."""
+    k = x.shape[-1]
+    freqs = rope_freqs(k, theta)                           # (K/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, K/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, G, S, K)
+    v: jax.Array  # (B, G, S, K)
+
+
+def init_gqa(key, cfg: ArchConfig, dtype) -> dict:
+    d, h, g = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    k = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (d, h, k), dtype=dtype),
+        "wk": _init(ks[1], (d, g, k), dtype=dtype),
+        "wv": _init(ks[2], (d, g, k), dtype=dtype),
+        "wo": _init(ks[3], (h, k, d), scale=1.0 / (h * k) ** 0.5, dtype=dtype),
+    }
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,S,G,Hq,K), k/v (B,G,T,K), mask (B,1,1,S,T) or None.
+
+    Materialized softmax (train path): the "attn_scores_gqa" hook shards
+    the (B,G,H,S,T) score tensor's query-seq axis over "model"
+    (Megatron-SP style) so the S x T block never replicates — and because
+    remat replays constraints, the backward recompute is sharded too.
+    """
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bsghk,bgtk->bghst", q, k) * scale
+    scores = constrain(scores.astype(jnp.float32), "attn_scores_gqa")
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    probs = constrain(probs, "attn_scores_gqa")
+    return jnp.einsum("bghst,bgtk->bsghk", probs, v)
+
+
+# Sequence length above which the train/prefill path switches from the
+# materialized softmax to the chunked online-softmax (flash) formulation.
+FLASH_THRESHOLD = 1024
+FLASH_Q_CHUNK = 512
+FLASH_KV_CHUNK = 1024
+
+
+def flash_attention(q, k, v, *, causal: bool, scale: float,
+                    q_chunk: int = FLASH_Q_CHUNK,
+                    kv_chunk: int = FLASH_KV_CHUNK,
+                    causal_skip: bool = False):
+    """Online-softmax (flash) attention in GQA layout, O(qc*kc) score memory.
+
+    q (B,S,G,Hq,K), k (B,G,T,K), v (B,G,T,Kv) -> out (B,S,G,Hq,Kv).
+
+    Baseline computes the full S x T rectangle with masking. With
+    ``causal_skip`` the inner scan only visits kv chunks that intersect
+    the causal triangle of the current q chunk (beyond-paper §Perf
+    iteration: halves attention-score FLOPs at long context).
+    """
+    b, s, g, hq, d = q.shape
+    t = k.shape[2]
+    dv = v.shape[-1]
+    nq = s // q_chunk if (s % q_chunk == 0 and s >= q_chunk) else 1
+    qc = s // nq
+    nk = t // kv_chunk if (t % kv_chunk == 0 and t >= kv_chunk) else 1
+    kc = t // nk
+
+    qb = jnp.moveaxis(q.reshape(b, nq, qc, g, hq, d), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, g, nk, kc, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, g, nk, kc, dv), 2, 0)
+
+    def q_block(_, iq_qi):
+        iq, qi = iq_qi                                     # qi (B,qc,G,Hq,K)
+        q_pos = iq * qc + jnp.arange(qc)
+
+        def kv_block(state, jk_kv):
+            jk, kj, vj = jk_kv                             # kj (B,G,kc,K)
+            acc, m, l = state
+            scores = jnp.einsum("bqghk,bgtk->bghqt", qi, kj) * scale
+            scores = scores.astype(jnp.float32)
+            k_pos = jk * kc + jnp.arange(kc)
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                scores = jnp.where(mask[None, None, None], scores, -1e30)
+            m_new = jnp.maximum(m, scores.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bghqt,bgtv->bghqv", p, vj.astype(jnp.float32))
+            return (acc_new, m_new, l_new), None
+
+        init = (jnp.zeros((b, g, hq, qc, dv), jnp.float32),
+                jnp.full((b, g, hq, qc), -jnp.inf, jnp.float32),
+                jnp.zeros((b, g, hq, qc), jnp.float32))
+        if causal_skip and causal and s == t:
+            # only kv chunks 0..iq intersect the triangle; bound the scan
+            # with a while_loop over a traced limit.
+            def cond(c):
+                return c[0] <= iq
+
+            def body(c):
+                j, state = c
+                state, _ = kv_block(state, (j, kb[j], vb[j]))
+                return j + 1, state
+
+            _, (acc, m, l) = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), init))
+        else:
+            (acc, m, l), _ = jax.lax.scan(
+                kv_block, init, (jnp.arange(nk), kb, vb))
+        out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+        return None, jnp.moveaxis(out, 3, 1)               # (B,qc,G,Hq,Kv)
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, g, hq, dv)
+
+
+def gqa_attention(params: dict, x: jax.Array, positions: jax.Array,
+                  cfg: ArchConfig, *, causal: bool = True,
+                  cache: Optional[KVCache] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  return_cache: bool = False,
+                  kv_x: Optional[jax.Array] = None,
+                  static_kv: Optional[KVCache] = None):
+    """GQA attention; cross-attention when kv_x is given.
+
+    Modes:
+      - cache is None: full self-attention over x (train/prefill); when
+        return_cache, also emits the packed cache.
+      - cache given + cache_index: decode — one (or few) new tokens, cache
+        updated at cache_index.
+      - static_kv: PRECOMPUTED cross-attention K/V (whisper decode) — no
+        projection, no cache update (§Perf: avoids re-encoding the 1500
+        encoder frames every decode step).
+    """
+    b, s, d = x.shape
+    h, g = cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if static_kv is not None:
+        q = q.reshape(b, s, g, h // g, hd)
+        out = _sdpa(q, static_kv.k, static_kv.v, None)
+        out = out.reshape(b, s, h, hd)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), None
+    src = kv_x if kv_x is not None else x
+    k = jnp.einsum("bsd,dgk->bsgk", src, params["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", src, params["wv"])
+    if kv_x is None:  # rope only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = jnp.swapaxes(k, 1, 2)                              # (B, G, S, K)
+    v = jnp.swapaxes(v, 1, 2)
+    q = q.reshape(b, s, g, h // g, hd)
+
+    if cache is not None:
+        if s == 1:
+            k_all = cache.k.at[:, :, cache_index, :].set(k[:, :, 0, :])
+            v_all = cache.v.at[:, :, cache_index, :].set(v[:, :, 0, :])
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache.k, k, (0, 0, cache_index, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache.v, v, (0, 0, cache_index, 0))
+        t = cache.k.shape[2]
+        # valid positions: <= current index
+        tpos = jnp.arange(t)[None, None, None, None, :]
+        mask = tpos <= cache_index
+        out = _sdpa(q, k_all, v_all, mask)
+        new_cache = KVCache(k_all, v_all)
+    else:
+        t = src.shape[1]
+        is_causal = causal and kv_x is None
+        impl = get_flag("attn_impl", "auto")
+        use_flash = impl == "flash" or (
+            impl == "auto" and s >= FLASH_THRESHOLD and t >= FLASH_THRESHOLD)
+        if use_flash:
+            out = flash_attention(q, k, v, causal=is_causal,
+                                  scale=1.0 / (hd ** 0.5),
+                                  causal_skip=bool(get_flag("causal_skip",
+                                                            False)))
+        else:
+            if is_causal:
+                mask = (jnp.arange(t)[None, :] <= jnp.arange(s)[:, None])
+                mask = mask[None, None, None, :, :]
+            else:
+                mask = None
+            out = _sdpa(q, k, v, mask)
+        new_cache = KVCache(k, v) if return_cache else None
+
+    out = out.reshape(b, s, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return (y, new_cache) if (return_cache or cache is not None) else (y, None)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (MiniCPM3 / DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S, C) compressed latent
+    k_rope: jax.Array  # (B, S, R) shared rotary key
+
+
+def init_mla(key, cfg: ArchConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": _init(ks[0], (d, qr), dtype=dtype),
+        "q_norm": jnp.ones((qr,), dtype),
+        "w_uq": _init(ks[1], (qr, h, nd + rd), dtype=dtype),
+        "w_dkv": _init(ks[2], (d, kr), dtype=dtype),
+        "kv_norm": jnp.ones((kr,), dtype),
+        "w_kr": _init(ks[3], (d, rd), dtype=dtype),
+        "w_uk": _init(ks[4], (kr, h, nd), dtype=dtype),
+        "w_uv": _init(ks[5], (kr, h, vd), dtype=dtype),
+        "wo": _init(ks[6], (h, vd, d), scale=1.0 / (h * vd) ** 0.5,
+                    dtype=dtype),
+    }
+
+
+def mla_attention(params: dict, x: jax.Array, positions: jax.Array,
+                  cfg: ArchConfig, *, cache: Optional[MLACache] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  return_cache: bool = False):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nd, rd = cfg.nope_head_dim, cfg.rope_head_dim
+    scale = 1.0 / ((nd + rd) ** 0.5)
+
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dc->bsc", x, params["w_dq"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsc,chk->bshk", cq, params["w_uq"])
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rmsnorm(params["kv_norm"],
+                  jnp.einsum("bsd,dc->bsc", x, params["w_dkv"]), cfg.norm_eps)
+    kr_new = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :]
+    kr_new = apply_rope(kr_new, positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        if s == 1:
+            c_all = cache.c_kv.at[:, cache_index, :].set(ckv[:, 0, :])
+            r_all = cache.k_rope.at[:, cache_index, :].set(kr_new[:, 0, :])
+        else:
+            c_all = jax.lax.dynamic_update_slice(cache.c_kv, ckv,
+                                                 (0, cache_index, 0))
+            r_all = jax.lax.dynamic_update_slice(cache.k_rope, kr_new,
+                                                 (0, cache_index, 0))
+        # Absorbed decode (DeepSeek-V2 inference trick): score directly in
+        # the latent space — no per-step K/V re-expansion.
+        q_lat = jnp.einsum("bshn,chn->bshc", q_nope, params["w_uk"])
+        scores = (jnp.einsum("bshc,btc->bhst", q_lat, c_all)
+                  + jnp.einsum("bshr,btr->bhst", q_rope, r_all)) * scale
+        t = c_all.shape[1]
+        mask = (jnp.arange(t)[None, None, None, :] <= cache_index)
+        scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out_lat = jnp.einsum("bhst,btc->bshc", probs, c_all)
+        out = jnp.einsum("bshc,chv->bshv", out_lat, params["w_uv"])
+        new_cache = MLACache(c_all, r_all)
+    else:
+        k_nope = jnp.einsum("btc,chn->bthn", ckv, params["w_uk"])
+        v = jnp.einsum("btc,chv->bthv", ckv, params["w_uv"])
+        impl = get_flag("attn_impl", "auto")
+        use_flash = impl == "flash" or (impl == "auto"
+                                        and s >= FLASH_THRESHOLD)
+        if use_flash:
+            # concat nope+rope dims; per-head keys -> GQA layout g=h, hq=1
+            q_cat = jnp.concatenate([q_nope, q_rope], -1)   # (B,S,H,nd+rd)
+            k_cat = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr_new[:, :, None, :],
+                                          (*k_nope.shape[:3], rd))], -1)
+            out = flash_attention(
+                q_cat.reshape(b, s, h, 1, nd + rd),
+                jnp.swapaxes(k_cat, 1, 2), jnp.swapaxes(v, 1, 2),
+                causal=True, scale=scale,
+                causal_skip=bool(get_flag("causal_skip", False)))
+            out = out.reshape(b, s, h, -1)
+        else:
+            scores = (jnp.einsum("bshn,bthn->bhst", q_nope, k_nope)
+                      + jnp.einsum("bshr,btr->bhst", q_rope, kr_new)) * scale
+            scores = constrain(scores.astype(jnp.float32), "attn_scores_mla")
+            mask = (jnp.arange(s)[None, :] <= jnp.arange(s)[:, None])
+            scores = jnp.where(mask[None, None], scores, -1e30)
+            probs = constrain(jax.nn.softmax(scores, axis=-1),
+                              "attn_scores_mla").astype(x.dtype)
+            out = jnp.einsum("bhst,bthv->bshv", probs, v)
+        new_cache = MLACache(ckv, kr_new) if return_cache else None
+
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs + MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, mlp_type: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": _init(ks[0], (d, f), dtype=dtype),
+         "w_out": _init(ks[1], (f, d), dtype=dtype)}
+    if mlp_type == "swiglu":
+        p["w_gate"] = _init(ks[2], (d, f), dtype=dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, mlp_type: str) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    if mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, e), scale=0.02, dtype=jnp.float32),
+        "w_in": _init(ks[1], (e, d, f), dtype=dtype),
+        "w_gate": _init(ks[2], (e, d, f), dtype=dtype),
+        "w_out": _init(ks[3], (e, f, d), dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.num_shared_experts,
+                               "swiglu", dtype)
+    return p
+
+
+def moe_block(params: dict, x: jax.Array, cfg: ArchConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE with capacity cap — the LDU analogue: predicted per-expert
+    load is capped at (capacity_factor x ideal), overflow tokens drop to
+    the shared-expert / residual path (GShard semantics).
+
+    Dispatch is PER-SEQUENCE ("local routing"): each batch row sorts its
+    own tokens into expert bins. A flat global sort would run argsort
+    along the data-sharded token axis, which forces GSPMD to replicate the
+    whole dispatch (measured: 8.3 TB/step of all-reduce on
+    moonshot/train_4k — EXPERIMENTS.md §Perf cell A); row-local sorting
+    keeps every step shard-local and the expert combine becomes
+    all-to-all-shaped.
+
+    Decode (s == 1) takes the weight-gather path instead: FLOP-minimal,
+    reads only the k routed experts' weights per token.
+
+    Returns (output, aux_load_balance_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch-style), normalized by k so uniform routing -> 1.0
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_idx, e).sum(2), axis=(0, 1))
+    aux = jnp.sum(me * ce) * e / max(k, 1)
+
+    if s == 1:
+        y = _moe_decode_dispatch(params, x, gate_vals, expert_idx, cfg)
+    else:
+        y = _moe_dispatch_per_row(params, x, gate_vals, expert_idx, cfg)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, "swiglu")
+    return y, aux
+
+
+def _moe_decode_dispatch(params, x, gate_vals, expert_idx, cfg):
+    """Decode-regime MoE: flat dispatch over the (tiny) token batch with a
+    capped expert buffer.
+
+    The token-side arrays are B*k elements — replicating the sort is free
+    — while the (E, C, d) buffer stays EXPERT-SHARDED so the per-expert
+    matmuls never move weights (a per-token weight GATHER would all-gather
+    the expert-sharded weights: measured +115 GiB/dev on llama4
+    decode_32k). moe_decode_capacity_factor caps C (default 4x ideal);
+    0 = dropless (C = tokens)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    tk = t * k
+    factor = cfg.moe_decode_capacity_factor or 4.0
+    if cfg.moe_decode_capacity_factor == 0.0 and t <= 256:
+        capacity = t                     # dropless for small serving batches
+    else:
+        capacity = min(t, max(k, int(round(t * k / e * factor))))
+
+    xf = x.reshape(t, d)
+    flat_e = expert_idx.reshape(tk)
+    flat_g = gate_vals.reshape(tk)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sg, stok = flat_e[order], flat_g[order], flat_tok[order]
+    ar = jnp.arange(tk)
+    new_run = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+    run_start = jax.lax.cummax(jnp.where(new_run, ar, 0))
+    pos = ar - run_start
+    keep = pos < capacity
+    slot = jnp.where(keep, se * capacity + pos, e * capacity)
+
+    buf = jnp.zeros((e * capacity + 1, d), x.dtype).at[slot].set(
+        xf[stok] * keep[:, None].astype(x.dtype))
+    hbuf = constrain(buf[:-1].reshape(e, capacity, d), "moe_buf_decode")
+    hin = jnp.einsum("ecd,edf->ecf", hbuf, params["w_in"])
+    hg = jnp.einsum("ecd,edf->ecf", hbuf, params["w_gate"])
+    hout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hin,
+                      params["w_out"])
+    hout = constrain(hout, "moe_buf_decode")
+    hflat = jnp.concatenate(
+        [hout.reshape(e * capacity, d), jnp.zeros((1, d), x.dtype)], 0)
+    contrib = hflat[slot] * (sg * keep)[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[stok].add(contrib)
+    return y.reshape(b, s, d)
+
+
+def _moe_dispatch_per_row(params, x, gate_vals, expert_idx, cfg):
+    """Row-local sort-based dispatch with capacity cap."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tk = s * k
+    # Dropless only at serving-scale rows: capacity = tk means every
+    # expert matmul runs over a tk-deep buffer — at train rows (s=4096,
+    # k=1 -> tk=4096) that is a ~E/k x compute blowup (measured: llama4
+    # train compute 3.3 s -> 131 s when this threshold was 4096).
+    if tk <= 512 and cfg.moe_capacity_factor >= 1.0:
+        capacity = tk
+    else:
+        capacity = int(max(1, round(tk / e * cfg.moe_capacity_factor)))
+
+    flat_e = expert_idx.reshape(b, tk)
+    flat_g = gate_vals.reshape(b, tk)
+    flat_tok = jnp.repeat(jnp.arange(s), k)[None, :]       # (1, tk)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)      # (B, tk)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    stok = jnp.take_along_axis(jnp.broadcast_to(flat_tok, (b, tk)), order,
+                               axis=-1)
+    # position within the expert run: arange - (start index of the run)
+    ar = jnp.arange(tk)[None, :]
+    new_run = jnp.concatenate(
+        [jnp.ones((b, 1), bool), se[:, 1:] != se[:, :-1]], axis=1)
+    run_start = jax.lax.cummax(jnp.where(new_run, ar, 0), axis=1)
+    pos = ar - run_start
+    keep = pos < capacity
+    slot = jnp.where(keep, se * capacity + pos, e * capacity)  # (B, tk)
+
+    gathered = jnp.take_along_axis(x, stok[..., None], axis=1)  # (B,tk,d)
+    gathered = gathered * keep[..., None].astype(x.dtype)
+    buf = jnp.zeros((b, e * capacity + 1, d), x.dtype)
+    buf = jax.vmap(lambda bu, sl, g: bu.at[sl].set(g))(buf, slot, gathered)
+    hbuf = constrain(buf[:, :-1].reshape(b, e, capacity, d), "moe_buf")
+    hin = jnp.einsum("becd,edf->becf", hbuf, params["w_in"])
+    hg = jnp.einsum("becd,edf->becf", hbuf, params["w_gate"])
+    hout = jnp.einsum("becf,efd->becd", jax.nn.silu(hg) * hin,
+                      params["w_out"])
+    hout = constrain(hout, "moe_buf")
+    hflat = jnp.concatenate(
+        [hout.reshape(b, e * capacity, d),
+         jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    contrib = jnp.take_along_axis(hflat, slot[..., None], axis=1) \
+        * (sg * keep)[..., None].astype(x.dtype)           # (B, tk, d)
+    y = jnp.zeros((b, s, d), x.dtype)
+    y = jax.vmap(lambda yo, tok, c: yo.at[tok].add(c))(y, stok, contrib)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+class SSMState(NamedTuple):
+    h: jax.Array     # (B, H, P, N) recurrent state
+    conv: jax.Array  # (B, conv_dim, W-1) rolling conv window
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    conv_dim = d_in + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        # projects to [z (gate), x, B, C, dt]
+        "w_in": _init(ks[0], (d, 2 * d_in + 2 * n + h), dtype=dtype),
+        "conv_w": _init(ks[1], (conv_dim, w), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_norm": jnp.ones((d_in,), dtype),
+        "w_out": _init(ks[2], (d_in, d), dtype=dtype),
+    }
+
+
+def _segsum(a):
+    """exp-able segment sums: a (..., Q) -> (..., Q, Q) lower-tri cumulative."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    # L[i, j] = exp(sum_{l=j+1..i} a_l) = exp(cs[i] - cs[j]) for i >= j.
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_mix(params: dict, x: jax.Array, cfg: ArchConfig, *,
+               state: Optional[SSMState] = None,
+               return_state: bool = False):
+    """Chunked SSD for train/prefill; single-step recurrence for decode."""
+    b, s, d = x.shape
+    d_in, n = cfg.d_inner, cfg.ssm_state
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)   # (B,S,conv_dim)
+
+    if state is not None and s == 1:
+        # --- decode: rolling conv + one recurrence step ------------------
+        window = jnp.concatenate([state.conv, conv_in.swapaxes(1, 2)], -1)
+        conv_out = jnp.einsum("bcw,cw->bc", window, params["conv_w"]) \
+            + params["conv_b"]
+        conv_out = jax.nn.silu(conv_out)[:, None, :]
+        new_conv = window[:, :, 1:]
+        xin_c, b_c, c_c = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+        xh = xin_c.reshape(b, 1, h, p)[:, 0]
+        dt_s = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                               + params["dt_bias"])       # (B, H)
+        a = -jnp.exp(params["a_log"])                       # (H,)
+        decay = jnp.exp(dt_s * a)                           # (B, H)
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dt_s, b_c[:, 0].astype(jnp.float32),
+                         xh.astype(jnp.float32))
+        h_new = state.h * decay[:, :, None, None] + dbx
+        y = jnp.einsum("bhpn,bn->bhp", h_new, c_c[:, 0].astype(jnp.float32))
+        y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, 1, d_in).astype(x.dtype)
+        new_state = SSMState(h=h_new, conv=new_conv)
+    else:
+        # --- train/prefill: causal conv + chunked SSD --------------------
+        pad = jnp.zeros((b, w - 1, conv_in.shape[-1]), conv_in.dtype) \
+            if state is None else state.conv.swapaxes(1, 2)
+        seq = jnp.concatenate([pad, conv_in], axis=1)       # (B, S+W-1, C)
+        idx = jnp.arange(s)[:, None] + jnp.arange(w)[None, :]
+        windows = seq[:, idx, :]                            # (B, S, W, C)
+        conv_out = jnp.einsum("bswc,cw->bsc", windows,
+                              params["conv_w"]) + params["conv_b"]
+        conv_out = jax.nn.silu(conv_out)
+        xin_c, b_c, c_c = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+        q = min(cfg.ssm_chunk, s)
+        assert s % q == 0, f"seq {s} must be divisible by ssm_chunk {q}"
+        nc = s // q
+        xh = xin_c.reshape(b, nc, q, h, p).astype(jnp.float32)
+        bm = b_c.reshape(b, nc, q, n).astype(jnp.float32)
+        cm = c_c.reshape(b, nc, q, n).astype(jnp.float32)
+        dt_s = jax.nn.softplus(
+            dt.reshape(b, nc, q, h).astype(jnp.float32) + params["dt_bias"])
+        a = -jnp.exp(params["a_log"])                       # (H,)
+        da = dt_s * a                                       # (B,NC,Q,H)
+        da_h = jnp.moveaxis(da, -1, 2)                      # (B,NC,H,Q)
+        xdt = xh * dt_s[..., None]                          # x pre-scaled by dt
+
+        lmat = jnp.exp(_segsum(da_h))                       # (B,NC,H,Q,Q)
+        y_diag = jnp.einsum("bcqn,bcsn,bchqs,bcshp->bcqhp",
+                            cm, bm, lmat, xdt)
+
+        cum = jnp.cumsum(da_h, axis=-1)                     # (B,NC,H,Q)
+        decay_states = jnp.exp(cum[..., -1:] - cum)         # (B,NC,H,Q)
+        chunk_states = jnp.einsum("bcqn,bchq,bcqhp->bchpn",
+                                  bm, decay_states, xdt)
+        chunk_decay = jnp.exp(cum[..., -1])                 # (B,NC,H)
+
+        h0 = jnp.zeros((b, h, p, n), jnp.float32) if state is None \
+            else state.h
+
+        def scan_fn(carry, inp):
+            st, dec = inp
+            new = carry * dec[..., None, None] + st
+            return new, carry  # emit state ENTERING the chunk
+
+        hs_last, h_prevs = jax.lax.scan(
+            scan_fn, h0,
+            (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+        h_prev = jnp.moveaxis(h_prevs, 0, 1)                # (B,NC,H,P,N)
+
+        state_decay = jnp.exp(cum)                          # (B,NC,H,Q)
+        y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", cm, h_prev, state_decay)
+        y = (y_diag + y_off).reshape(b, s, h, p)
+        y = y + params["d_skip"][None, None, :, None] * xh.reshape(b, s, h, p)
+        y = y.reshape(b, s, d_in).astype(x.dtype)
+        new_conv = jnp.swapaxes(seq[:, -(w - 1):, :], 1, 2) \
+            if return_state else None
+        new_state = SSMState(h=hs_last, conv=new_conv) if return_state else None
+
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, new_state

@@ -1,0 +1,551 @@
+"""Model factory: init / forward / prefill / decode for every family.
+
+Layer stacks run under ``jax.lax.scan`` over stacked parameters (HLO stays
+small for 95-layer configs; remat policy selectable). Caches mirror the
+stacking so decode threads them through the same scan.
+
+Families:
+  dense   : [attn -> mlp] x L                       (yi, deepseek, starcoder2,
+                                                     minicpm3 w/ MLA)
+  moe     : [attn -> moe] x L                       (moonshot, llama4)
+  ssm     : [mamba2] x L                            (mamba2-780m)
+  hybrid  : mamba2 x L + shared attn block every k  (zamba2)
+  encdec  : encoder [attn -> mlp] + decoder w/ cross-attn  (whisper; stub
+            frontend supplies frame embeddings)
+  vlm     : vision-prefix embeddings + dense decoder       (internvl2; stub
+            frontend supplies patch embeddings)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding_hooks import constrain
+
+
+def _dtype(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    """One decoder block's params (unstacked)."""
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        p["ln1"] = jnp.ones((cfg.d_model,), dtype)
+        p["attn"] = (L.init_mla(ks[0], cfg, dtype) if cfg.attention == "mla"
+                     else L.init_gqa(ks[0], cfg, dtype))
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        if cfg.family == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                  cfg.mlp_type, dtype)
+        if cfg.family == "encdec":
+            p["ln_x"] = jnp.ones((cfg.d_model,), dtype)
+            p["xattn"] = L.init_gqa(ks[2], cfg, dtype)
+    elif cfg.family in ("ssm", "hybrid"):
+        p["ln1"] = jnp.ones((cfg.d_model,), dtype)
+        p["ssm"] = L.init_mamba2(ks[0], cfg, dtype)
+    return p
+
+
+def _init_shared_attn(key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    d_ff = cfg.shared_attn_d_ff or cfg.d_ff
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_gqa(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, d_ff, "swiglu", dtype),
+    }
+
+
+def _stack(blocks):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L._init(ks[0], (cfg.vocab_size, cfg.d_model), scale=0.02,
+                         dtype=dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                    dtype=dtype)
+
+    layer_keys = jax.random.split(ks[2], cfg.num_layers)
+    blocks = [_init_block(k, cfg, dtype) for k in layer_keys]
+    # hybrid always stacks: its group/tail slicing assumes stacked leaves.
+    stack = cfg.scan_layers or cfg.family == "hybrid"
+    params["layers"] = _stack(blocks) if stack else blocks
+
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_shared_attn(ks[3], cfg, dtype)
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(ks[4], cfg.encoder_layers)
+        enc_cfg = cfg  # same dims for encoder blocks
+        enc_blocks = []
+        for ek in enc_keys:
+            eks = jax.random.split(ek, 2)
+            enc_blocks.append({
+                "ln1": jnp.ones((cfg.d_model,), dtype),
+                "attn": L.init_gqa(eks[0], enc_cfg, dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype),
+                "mlp": L.init_mlp(eks[1], cfg.d_model, cfg.d_ff,
+                                  cfg.mlp_type, dtype),
+            })
+        params["encoder"] = _stack(enc_blocks) if cfg.scan_layers else enc_blocks
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.family == "vlm":
+        params["vision_proj"] = L._init(ks[5], (cfg.d_model, cfg.d_model),
+                                        dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Union cache across families; unused fields are None."""
+
+    kv: Optional[Any]          # stacked L.KVCache (L, ...) or MLACache
+    ssm: Optional[L.SSMState]  # stacked (L, ...)
+    shared_kv: Optional[Any]   # (n_invocations, ...) for zamba shared block
+    enc_out: Optional[jax.Array]  # (B, enc_seq, D) for whisper cross-attn
+    cross_kv: Optional[Any]    # stacked (L, B, G, enc_seq, K) precomputed
+    index: jax.Array           # () int32 — next write position
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               enc_out: Optional[jax.Array] = None,
+               with_cross_kv: bool = True) -> DecodeCache:
+    dtype = _dtype(cfg)
+    n_l = cfg.num_layers
+    kv = ssm = shared = cross = None
+    hd = cfg.resolved_head_dim
+    if cfg.family == "encdec" and with_cross_kv:
+        cross = L.KVCache(
+            k=jnp.zeros((n_l, batch, cfg.num_kv_heads, cfg.encoder_seq, hd),
+                        dtype),
+            v=jnp.zeros((n_l, batch, cfg.num_kv_heads, cfg.encoder_seq, hd),
+                        dtype))
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        if cfg.attention == "mla":
+            kv = L.MLACache(
+                c_kv=jnp.zeros((n_l, batch, max_seq, cfg.kv_lora_rank), dtype),
+                k_rope=jnp.zeros((n_l, batch, max_seq, cfg.rope_head_dim),
+                                 dtype))
+        else:
+            kv = L.KVCache(
+                k=jnp.zeros((n_l, batch, cfg.num_kv_heads, max_seq, hd), dtype),
+                v=jnp.zeros((n_l, batch, cfg.num_kv_heads, max_seq, hd), dtype))
+    if cfg.family in ("ssm", "hybrid"):
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        ssm = L.SSMState(
+            h=jnp.zeros((n_l, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32),
+            conv=jnp.zeros((n_l, batch, conv_dim, cfg.ssm_conv_width - 1),
+                           dtype))
+    if cfg.family == "hybrid":
+        n_inv = cfg.num_layers // cfg.shared_attn_every
+        shared = L.KVCache(
+            k=jnp.zeros((n_inv, batch, cfg.num_kv_heads, max_seq, hd), dtype),
+            v=jnp.zeros((n_inv, batch, cfg.num_kv_heads, max_seq, hd), dtype))
+    return DecodeCache(kv=kv, ssm=ssm, shared_kv=shared, enc_out=enc_out,
+                       cross_kv=cross, index=jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, x, positions, cfg: ArchConfig, *, cache=None,
+                 cache_index=None, return_cache=False, enc_out=None,
+                 ssm_state=None, cross_kv=None):
+    """One decoder block. Returns (x, new_kv, new_ssm, aux_loss[, cross])."""
+    # Sequence-parallel residual stream (hook set by the step factories):
+    # remat saves this carry per layer, so sharding it over "model" is
+    # what keeps the 95-layer configs inside HBM (DESIGN.md §5).
+    x = constrain(x, "residual")
+    aux = jnp.float32(0.0)
+    new_kv = new_ssm = None
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cfg.attention == "mla":
+            y, new_kv = L.mla_attention(p["attn"], h, positions, cfg,
+                                        cache=cache, cache_index=cache_index,
+                                        return_cache=return_cache)
+        else:
+            y, new_kv = L.gqa_attention(p["attn"], h, positions, cfg,
+                                        cache=cache, cache_index=cache_index,
+                                        return_cache=return_cache)
+        x = x + y
+        if cfg.family == "encdec":
+            h = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+            if cross_kv is not None:
+                y, _ = L.gqa_attention(p["xattn"], h, positions, cfg,
+                                       causal=False, static_kv=cross_kv)
+            else:
+                y, _ = L.gqa_attention(p["xattn"], h, positions, cfg,
+                                       causal=False, kv_x=enc_out)
+            x = x + y
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            y, aux = L.moe_block(p["moe"], h, cfg)
+        else:
+            y = L.mlp(p["mlp"], h, cfg.mlp_type)
+        x = x + y
+    else:  # ssm / hybrid mamba block
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, new_ssm = L.mamba2_mix(p["ssm"], h, cfg, state=ssm_state,
+                                  return_state=return_cache or
+                                  ssm_state is not None)
+        x = x + y
+    return x, new_kv, new_ssm, aux
+
+
+def _apply_shared_attn(p, x, positions, cfg, *, cache=None, cache_index=None,
+                       return_cache=False):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    y, new_kv = L.gqa_attention(p["attn"], h, positions, cfg, cache=cache,
+                                cache_index=cache_index,
+                                return_cache=return_cache)
+    x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], h, "swiglu")
+    return x, new_kv
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_layers(params, x, positions, cfg: ArchConfig, *, build_cache=False,
+                enc_out=None):
+    """Scan the decoder stack. Returns (x, stacked kv caches, stacked ssm
+    states, total aux loss)."""
+    if cfg.family == "hybrid":
+        return _run_layers_hybrid(params, x, positions, cfg,
+                                  build_cache=build_cache)
+
+    def body(carry, lp):
+        h, aux_acc = carry
+        h, kv, ssm, aux = _apply_block(lp, h, positions, cfg,
+                                       return_cache=build_cache,
+                                       enc_out=enc_out)
+        out = {}
+        if kv is not None:
+            out["kv"] = kv
+        if ssm is not None:
+            out["ssm"] = ssm
+        if build_cache and cfg.family == "encdec":
+            # precompute this layer's cross-attention K/V once (§Perf:
+            # whisper decode otherwise re-projects 1500 frames per step)
+            ck = jnp.einsum("btd,dgk->bgtk", enc_out, lp["xattn"]["wk"])
+            cv = jnp.einsum("btd,dgk->bgtk", enc_out, lp["xattn"]["wv"])
+            out["cross"] = L.KVCache(ck, cv)
+        return (h, aux_acc + aux), out
+
+    body = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        (x, aux), outs = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                      params["layers"])
+    else:
+        aux = jnp.float32(0.0)
+        outs_list = []
+        for lp in params["layers"]:
+            (x, aux), o = body((x, aux), lp)
+            outs_list.append(o)
+        outs = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs_list) \
+            if outs_list and outs_list[0] else {}
+    kv = outs.get("kv") if isinstance(outs, dict) else None
+    ssm = outs.get("ssm") if isinstance(outs, dict) else None
+    cross = outs.get("cross") if isinstance(outs, dict) else None
+    return x, kv, ssm, aux, cross
+
+
+def _run_layers_hybrid(params, x, positions, cfg: ArchConfig, *,
+                       build_cache=False):
+    """Zamba2: groups of ``shared_attn_every`` mamba layers, each followed
+    by the SHARED attention block (same params every invocation)."""
+    k = cfg.shared_attn_every
+    n_groups = cfg.num_layers // k
+    tail = cfg.num_layers - n_groups * k
+    shared_p = params["shared_attn"]
+
+    def split_group(tree, start, size):
+        return jax.tree_util.tree_map(lambda a: a[start:start + size], tree)
+
+    grouped = split_group(params["layers"], 0, n_groups * k)
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_groups, k, *a.shape[1:]), grouped)
+    tail_p = split_group(params["layers"], n_groups * k, tail)
+
+    def inner(h, lp):
+        h, _, ssm, _ = _apply_block(lp, h, positions, cfg,
+                                    return_cache=build_cache)
+        return h, {"ssm": ssm} if ssm is not None else {}
+
+    def group_body(carry, gp):
+        h, aux = carry
+        if cfg.scan_layers:
+            h, inner_outs = jax.lax.scan(inner, h, gp)
+        else:
+            inner_list = []
+            for i in range(k):
+                h, o = inner(h, jax.tree_util.tree_map(lambda a: a[i], gp))
+                inner_list.append(o)
+            inner_outs = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *inner_list) \
+                if inner_list and inner_list[0] else {}
+        h, kv = _apply_shared_attn(shared_p, h, positions, cfg,
+                                   return_cache=build_cache)
+        outs = dict(inner_outs)
+        if kv is not None:
+            outs["kv"] = kv
+        return (h, aux), outs
+
+    group_body = _maybe_remat(group_body, cfg)
+    if cfg.scan_layers:
+        (x, aux), outs = jax.lax.scan(group_body, (x, jnp.float32(0.0)),
+                                      grouped)
+    else:
+        outs_list = []
+        carry = (x, jnp.float32(0.0))
+        for gi in range(n_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[gi], grouped)
+            carry, o = group_body(carry, gp)
+            outs_list.append(o)
+        x, aux = carry
+        outs = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                      *outs_list) \
+            if outs_list and outs_list[0] else {}
+
+    tail_ssm = None
+    if tail:  # leftover layers after the last full group, applied unrolled
+        tail_states = []
+        h = x
+        for i in range(tail):
+            lp = jax.tree_util.tree_map(lambda a: a[i], tail_p)
+            h, _, ssm, _ = _apply_block(lp, h, positions, cfg,
+                                        return_cache=build_cache)
+            tail_states.append(ssm)
+        x = h
+        if build_cache and tail_states[0] is not None:
+            tail_ssm = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                              *tail_states)
+
+    ssm_states = outs.get("ssm")
+    kv = outs.get("kv")
+    if build_cache and ssm_states is not None:
+        flat = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups * k, *a.shape[2:]), ssm_states)
+        if tail_ssm is not None:
+            flat = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], 0), flat, tail_ssm)
+        ssm_states = flat
+    return x, kv, ssm_states, aux, None
+
+
+def _encode(params, frames, cfg: ArchConfig):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    def body(h, lp):
+        y, _ = L.gqa_attention(lp["attn"], L.rmsnorm(lp["ln1"], h,
+                                                     cfg.norm_eps),
+                               pos, cfg, causal=False)
+        h = h + y
+        h = h + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"], h, cfg.norm_eps),
+                      cfg.mlp_type)
+        return h, None
+
+    body = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda h, lp: body(h, lp), x, params["encoder"])
+    else:
+        for lp in params["encoder"]:
+            x, _ = body(x, lp)
+    return L.rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+            *, build_cache: bool = False):
+    """Full forward over a token batch.
+
+    batch: {"tokens": (B, S) int32, optional "frames": (B, enc_seq, D),
+    optional "vision": (B, V, D)}. Returns (logits, aux_loss, cache).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    enc_out = None
+    offset = 0
+    if cfg.family == "encdec":
+        enc_out = _encode(params, batch["frames"].astype(_dtype(cfg)), cfg)
+    if cfg.family == "vlm":
+        vis = jnp.einsum("bvd,de->bve", batch["vision"].astype(_dtype(cfg)),
+                         params["vision_proj"])
+        x = jnp.concatenate([vis, x], axis=1)
+        offset = vis.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                 (b, x.shape[1]))
+    x, kv, ssm, aux, cross = _run_layers(params, x, positions, cfg,
+                                         build_cache=build_cache,
+                                         enc_out=enc_out)
+    x = x[:, offset:]
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    cache = None
+    if build_cache:
+        cache = DecodeCache(kv=kv, ssm=ssm, shared_kv=None, enc_out=enc_out,
+                            cross_kv=cross, index=jnp.int32(s + offset))
+    return logits, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, tokens: jax.Array, cache: DecodeCache,
+                cfg: ArchConfig):
+    """One-token decode: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    idx = cache.index
+    positions = jnp.full((b, 1), idx, jnp.int32)
+
+    if cfg.family == "hybrid":
+        x, new_kv, new_ssm = _decode_hybrid(params, x, positions, cache, cfg)
+        new_cache = cache._replace(ssm=new_ssm, shared_kv=new_kv,
+                                   index=idx + 1)
+    else:
+        def body(h, xs):
+            lp, layer_cache = xs
+            kv_c = layer_cache.get("kv")
+            ssm_c = layer_cache.get("ssm")
+            h, kv, ssm, _ = _apply_block(
+                lp, h, positions, cfg, cache=kv_c, cache_index=idx,
+                enc_out=cache.enc_out, ssm_state=ssm_c,
+                cross_kv=layer_cache.get("cross"))
+            out = {}
+            if kv is not None:
+                out["kv"] = kv
+            if ssm is not None:
+                out["ssm"] = ssm
+            return h, out
+
+        layer_caches = {}
+        if cache.kv is not None:
+            layer_caches["kv"] = cache.kv
+        if cache.ssm is not None:
+            layer_caches["ssm"] = cache.ssm
+        if cache.cross_kv is not None:
+            layer_caches["cross"] = cache.cross_kv
+        if cfg.scan_layers:
+            x, outs = jax.lax.scan(body, x, (params["layers"], layer_caches))
+        else:
+            outs_list = []
+            for i, lp in enumerate(params["layers"]):
+                lc = jax.tree_util.tree_map(lambda a: a[i], layer_caches)
+                x, o = body(x, (lp, lc))
+                outs_list.append(o)
+            outs = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                          *outs_list)
+        new_cache = cache._replace(kv=outs.get("kv"), ssm=outs.get("ssm"),
+                                   index=idx + 1)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, new_cache
+
+
+def _decode_hybrid(params, x, positions, cache: DecodeCache, cfg):
+    k = cfg.shared_attn_every
+    n_groups = cfg.num_layers // k
+    tail = cfg.num_layers - n_groups * k
+    idx = cache.index
+    shared_p = params["shared_attn"]
+
+    grouped = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * k].reshape(n_groups, k, *a.shape[1:]),
+        params["layers"])
+    g_ssm = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * k].reshape(n_groups, k, *a.shape[1:]),
+        cache.ssm)
+
+    def inner(h, xs):
+        lp, st = xs
+        h, _, ssm, _ = _apply_block(lp, h, positions, cfg, ssm_state=st)
+        return h, ssm
+
+    def group_body(h, xs):
+        gp, gstate, kv_c = xs
+        if cfg.scan_layers:
+            h, new_states = jax.lax.scan(inner, h, (gp, gstate))
+        else:
+            states = []
+            for i in range(k):
+                h, st = inner(h, jax.tree_util.tree_map(
+                    lambda a: a[i], (gp, gstate)))
+                states.append(st)
+            new_states = jax.tree_util.tree_map(
+                lambda *xs_: jnp.stack(xs_), *states)
+        h, kv = _apply_shared_attn(shared_p, h, positions, cfg, cache=kv_c,
+                                   cache_index=idx)
+        return h, {"ssm": new_states, "kv": kv}
+
+    if cfg.scan_layers:
+        x, outs = jax.lax.scan(group_body, x,
+                               (grouped, g_ssm, cache.shared_kv))
+    else:
+        outs_list = []
+        for gi in range(n_groups):
+            xs = jax.tree_util.tree_map(lambda a: a[gi],
+                                        (grouped, g_ssm, cache.shared_kv))
+            x, o = group_body(x, xs)
+            outs_list.append(o)
+        outs = jax.tree_util.tree_map(lambda *xs_: jnp.stack(xs_),
+                                      *outs_list)
+    new_ssm = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_groups * k, *a.shape[2:]), outs["ssm"])
+    if tail:
+        tail_p = jax.tree_util.tree_map(lambda a: a[n_groups * k:],
+                                        params["layers"])
+        tail_s = jax.tree_util.tree_map(lambda a: a[n_groups * k:], cache.ssm)
+        states = []
+        for i in range(tail):
+            lp = jax.tree_util.tree_map(lambda a: a[i], tail_p)
+            st = jax.tree_util.tree_map(lambda a: a[i], tail_s)
+            x, _, ssm, _ = _apply_block(lp, x, positions, cfg, ssm_state=st)
+            states.append(ssm)
+        tail_new = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+        new_ssm = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], 0), new_ssm, tail_new)
+    return x, outs["kv"], new_ssm

@@ -1,0 +1,37 @@
+"""Activation sharding hooks.
+
+Model code stays mesh-agnostic; step factories install NamedShardings here
+(e.g. sequence-parallel residual stream). Empty by default => no-ops, so
+CPU tests and single-device runs are untouched.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+_HOOKS: Dict[str, object] = {}
+
+
+def set_hooks(hooks: Optional[Dict[str, object]]) -> None:
+    global _HOOKS
+    _HOOKS = dict(hooks or {})
+
+
+def get_hooks() -> Dict[str, object]:
+    return dict(_HOOKS)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    s = _HOOKS.get(name)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def get_flag(name: str, default):
+    """Non-sharding execution flags (e.g. attn_impl: sdpa|flash|auto).
+
+    Train factories set "sdpa" (flash bwd would re-materialize S x T in
+    the scan reverse); prefill factories set "flash"."""
+    return _HOOKS.get(name, default)

@@ -1,0 +1,77 @@
+"""Serving steps: prefill + decode (the shapes the dry-run lowers).
+
+``prefill`` runs the full forward, builds the KV/SSM caches and pads them
+to ``max_seq`` so the decode loop is shape-static. ``decode`` emits one
+token per call; greedy sampling built in for the serving example.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.models.layers import KVCache, MLACache
+
+
+def _pad_cache_seq(cache: M.DecodeCache, max_seq: int) -> M.DecodeCache:
+    """Grow kv caches built at prompt length to the serving window."""
+    def pad_axis(a, axis):
+        if a.shape[axis] >= max_seq:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, max_seq - a.shape[axis])
+        return jnp.pad(a, widths)
+
+    kv = cache.kv
+    if isinstance(kv, KVCache):
+        kv = KVCache(k=pad_axis(kv.k, 3), v=pad_axis(kv.v, 3))
+    elif isinstance(kv, MLACache):
+        kv = MLACache(c_kv=pad_axis(kv.c_kv, 2),
+                      k_rope=pad_axis(kv.k_rope, 2))
+    shared = cache.shared_kv
+    if isinstance(shared, KVCache):
+        shared = KVCache(k=pad_axis(shared.k, 3), v=pad_axis(shared.v, 3))
+    return cache._replace(kv=kv, shared_kv=shared)
+
+
+def prefill(params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+            max_seq: Optional[int] = None
+            ) -> Tuple[jax.Array, M.DecodeCache]:
+    """Returns (logits (B,S,V), cache ready for decode)."""
+    logits, _, cache = M.forward(params, batch, cfg, build_cache=True)
+    if cfg.family == "hybrid":
+        # hybrid prefill rebuilds per-invocation caches via decode layout
+        raise NotImplementedError(
+            "hybrid prefill->decode chaining uses serve loop in "
+            "examples/serve_lm.py (cache built by forward covers kv only)")
+    if max_seq is not None:
+        cache = _pad_cache_seq(cache, max_seq)
+    return logits, cache
+
+
+def decode(params, tokens: jax.Array, cache: M.DecodeCache,
+           cfg: ArchConfig) -> Tuple[jax.Array, M.DecodeCache]:
+    """One decode step: tokens (B,1) -> (logits (B,1,V), updated cache)."""
+    return M.decode_step(params, tokens, cache, cfg)
+
+
+def greedy_generate(params, prompt: jax.Array, cfg: ArchConfig, *,
+                    max_new: int, max_seq: int):
+    """Reference generation loop (batched greedy)."""
+    b, s = prompt.shape
+    if cfg.family in ("ssm", "hybrid", "encdec", "vlm"):
+        raise NotImplementedError("example loop targets decoder-only LMs")
+    logits, cache = prefill(params, {"tokens": prompt}, cfg, max_seq=max_seq)
+    next_tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    cache = cache._replace(index=jnp.int32(s))
+    toks = [next_tok]
+
+    step_fn = jax.jit(lambda p, t, c: M.decode_step(p, t, c, cfg))
+    for _ in range(max_new - 1):
+        logits, cache = step_fn(params, next_tok, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks.append(next_tok)
+    return jnp.concatenate(toks, axis=1)

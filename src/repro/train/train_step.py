@@ -1,0 +1,82 @@
+"""Train / eval step factories.
+
+``make_train_step(cfg, opt_cfg, mesh)`` returns a jit-ready pure function
+``(TrainState, batch) -> (TrainState, metrics)``. When a mesh is supplied,
+logits/loss get explicit sharding constraints (vocab over "model", batch
+over the data axes) so the 200k-vocab CE never materializes unsharded.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                   init_opt_state)
+
+MOE_AUX_WEIGHT = 0.01
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+
+
+def _batch_axes(mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in fp32. logits (B,S,V), labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, labels[..., None],
+                                     axis=-1)[..., 0]
+    nll = lse - true_logit
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def make_loss_fn(cfg: ArchConfig, mesh: Optional[Mesh] = None):
+    baxes = _batch_axes(mesh)
+
+    def loss_fn(params, batch):
+        logits, aux, _ = M.forward(params, batch, cfg)
+        if mesh is not None:
+            vocab_axis = "model" \
+                if cfg.vocab_size % mesh.shape["model"] == 0 else None
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(mesh, P(baxes, None, vocab_axis)))
+        loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+        total = loss + MOE_AUX_WEIGHT * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
+                    mesh: Optional[Mesh] = None):
+    loss_fn = make_loss_fn(cfg, mesh)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics = dict(metrics, **opt_metrics, step=new_opt.step)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ArchConfig) -> TrainState:
+    params = M.init_params(key, cfg)
+    return TrainState(params=params, opt=init_opt_state(params))

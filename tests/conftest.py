@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see ONE device;
+the 512-device override belongs exclusively to launch/dryrun.py."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.camera import make_camera, look_at
+from repro.scenes.synthetic import structured_scene, random_blob_scene
+
+
+@pytest.fixture(scope="session")
+def small_scene():
+    return structured_scene(jax.random.PRNGKey(7), 600, clutter=0.5)
+
+
+@pytest.fixture(scope="session")
+def blob_scene():
+    return random_blob_scene(jax.random.PRNGKey(3), 400)
+
+
+@pytest.fixture(scope="session")
+def small_cam():
+    return make_camera(look_at((0.0, -0.3, -2.0), (0.0, 0.0, 6.0)),
+                       width=64, height=64)
+
+
+@pytest.fixture(scope="session")
+def wide_cam():
+    return make_camera(look_at((0.5, -0.5, -3.0), (0.0, 0.0, 6.0)),
+                       width=128, height=96)

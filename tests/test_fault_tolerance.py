@@ -1,0 +1,40 @@
+"""Fault-tolerance decision layer + serving loop smoke."""
+import pytest
+
+from repro.distributed.fault_tolerance import (FailureKind, Policy,
+                                               StepWatchdog, action_for,
+                                               classify)
+
+
+def test_classify_failures():
+    assert classify(ValueError("loss is NaN")) == FailureKind.NAN_LOSS
+    assert classify(RuntimeError("device lost: slice 3 halted")) \
+        == FailureKind.DEVICE_LOST
+    assert classify(OSError("no space left")) == FailureKind.CHECKPOINT_IO
+    assert classify(TimeoutError("collective timed out")) \
+        == FailureKind.STEP_TIMEOUT
+
+
+def test_every_failure_kind_has_an_action():
+    for kind in FailureKind:
+        assert len(action_for(kind)) > 10
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(Policy(straggler_grace=2.0))
+    for _ in range(10):
+        assert not wd.observe(1.0)
+    assert wd.observe(5.0)
+    assert wd.flagged == 1
+    assert not wd.observe(1.1)
+
+
+def test_serve_loop_smoke():
+    from repro.configs import get_config
+    from repro.launch.serve import serve
+
+    cfg = get_config("yi-9b").reduced()
+    out = serve(cfg, batch_slots=2, max_seq=32, n_requests=3,
+                prompt_len=4, max_new=4)
+    assert out["requests_done"] >= 1
+    assert out["decode_steps"] > 0

@@ -1,0 +1,101 @@
+"""TAIT properties (paper Sec. IV-C / Fig. 9) + hypothesis fuzzing.
+
+Invariants:
+  exact ⊆ TAIT ⊆ TAIT-stage1 ⊆ (3-sigma AABB when opacity <= 1)
+  exact ⊆ OBB
+  pair counts strictly improve AABB -> OBB -> TAIT toward exact.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import intersect, projection
+from repro.core.camera import make_camera, look_at
+from repro.core.gaussians import GaussianScene, rgb_to_sh_dc
+from repro.scenes.synthetic import structured_scene
+
+
+def _proj_and_grid(scene, cam):
+    proj = projection.preprocess(scene, cam)
+    grid = intersect.make_tile_grid(cam)
+    return proj, grid
+
+
+def test_tait_between_exact_and_aabb(small_scene, small_cam):
+    proj, grid = _proj_and_grid(small_scene, small_cam)
+    m_exact = intersect.exact_mask(proj, grid)
+    m_tait = intersect.tait_mask(proj, grid)
+    m_s1 = intersect.tait_stage1_mask(proj, grid)
+    m_obb = intersect.obb_mask(proj, grid)
+    assert bool(jnp.all(m_exact <= m_tait)), "TAIT dropped a true pair"
+    assert bool(jnp.all(m_tait <= m_s1)), "stage2 must only remove pairs"
+    assert bool(jnp.all(m_exact <= m_obb)), "OBB dropped a true pair"
+
+
+def test_pair_count_ordering(small_scene, wide_cam):
+    proj, grid = _proj_and_grid(small_scene, wide_cam)
+    counts = {m: int(intersect.pair_count(intersect.intersect(proj, grid, m)))
+              for m in ["aabb", "obb", "tait_stage1", "tait", "exact"]}
+    assert counts["exact"] <= counts["tait"] <= counts["tait_stage1"]
+    assert counts["tait"] <= counts["aabb"]
+    assert counts["exact"] <= counts["obb"] <= counts["aabb"]
+
+
+def test_elongated_gaussians_benefit_most(small_cam):
+    """TAIT's stage-2 is designed for elongated splats (paper Fig. 8)."""
+    n = 200
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 5)
+    means = jax.random.uniform(ks[0], (n, 3), minval=-2, maxval=2)
+    means = means.at[:, 2].add(6.0)
+    # strongly anisotropic: one long axis
+    log_scales = jnp.stack([
+        jax.random.uniform(ks[1], (n,), minval=-1.0, maxval=-0.3),
+        jnp.full((n,), -4.0), jnp.full((n,), -4.0)], -1)
+    quats = jax.random.normal(ks[2], (n, 4))
+    opac = jnp.full((n,), 2.0)
+    sh = jnp.zeros((n, 1, 3)).at[:, 0].set(rgb_to_sh_dc(jnp.full((n, 3), .5)))
+    scene = GaussianScene(means, log_scales, quats, opac, sh)
+    proj, grid = _proj_and_grid(scene, small_cam)
+    n_aabb = int(intersect.pair_count(intersect.aabb_mask(proj, grid)))
+    n_tait = int(intersect.pair_count(intersect.tait_mask(proj, grid)))
+    n_exact = int(intersect.pair_count(intersect.exact_mask(proj, grid)))
+    # At 64x64 the tile circumradius (11.3px) bounds stage-2 rejection; the
+    # reduction grows with resolution (see benchmarks/intersection.py).
+    assert n_tait < 0.7 * n_aabb, (n_tait, n_aabb)
+    assert n_tait <= 1.6 * max(n_exact, 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.1, 0.95),
+       st.floats(-4.5, -0.5))
+def test_tait_never_drops_true_pairs_fuzz(seed, opac_level, scale_level):
+    """Random scenes across opacity/scale regimes keep exact ⊆ TAIT."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    n = 64
+    means = jax.random.uniform(ks[0], (n, 3), minval=-2, maxval=2)
+    means = means.at[:, 2].add(5.0)
+    log_scales = jax.random.uniform(ks[1], (n, 3), minval=scale_level - 0.5,
+                                    maxval=scale_level + 0.5)
+    quats = jax.random.normal(ks[2], (n, 4))
+    logit = jnp.log(opac_level / (1 - opac_level))
+    sh = jnp.zeros((n, 1, 3))
+    scene = GaussianScene(means, log_scales, quats,
+                          jnp.full((n,), logit), sh)
+    cam = make_camera(look_at((0., 0., -1.), (0., 0., 5.)),
+                      width=64, height=64)
+    proj, grid = _proj_and_grid(scene, cam)
+    m_exact = intersect.exact_mask(proj, grid)
+    m_tait = intersect.tait_mask(proj, grid)
+    assert bool(jnp.all(m_exact <= m_tait))
+
+
+def test_per_tile_counts_match_mask(small_scene, small_cam):
+    proj, grid = _proj_and_grid(small_scene, small_cam)
+    mask = intersect.tait_mask(proj, grid)
+    per_tile = intersect.per_tile_count(mask)
+    assert int(per_tile.sum()) == int(intersect.pair_count(mask))
+    assert per_tile.shape == (grid.num_tiles,)

@@ -1,0 +1,131 @@
+"""TWSR / DPES / pipeline behaviour tests (paper Sec. IV, Algo. 1)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import warp as warp_mod
+from repro.core.camera import make_camera, look_at
+from repro.core.metrics import psnr
+from repro.core.pipeline import (RenderConfig, render_full_frame,
+                                 render_sparse_frame, render_trajectory)
+from repro.scenes.trajectory import dolly_trajectory, orbit_trajectory
+
+
+@pytest.fixture(scope="module")
+def ref_frame(small_scene, small_cam):
+    cfg = RenderConfig()
+    out, state, rec = jax.jit(render_full_frame, static_argnames="cfg")(
+        small_scene, small_cam, cfg=cfg)
+    return out, state
+
+
+def test_identity_warp_is_lossless(ref_frame, small_cam):
+    """Warping onto the SAME pose must reproduce covered pixels exactly."""
+    out, state = ref_frame
+    w = warp_mod.viewpoint_transform(
+        state.rgb, state.exp_depth, state.trunc_depth, state.source_mask,
+        small_cam, small_cam)
+    covered = np.asarray(state.source_mask)
+    diff = np.abs(np.asarray(w.rgb) - np.asarray(state.rgb))
+    assert float(diff[covered].max()) < 1e-5
+    # every source pixel maps to itself -> filled at least where covered
+    assert bool(np.all(np.asarray(w.filled)[covered]))
+
+
+def test_identity_warp_interpolates_everything(ref_frame, small_cam):
+    out, state = ref_frame
+    cov_frac = float(jnp.mean(state.source_mask.astype(jnp.float32)))
+    w = warp_mod.viewpoint_transform(
+        state.rgb, state.exp_depth, state.trunc_depth, state.source_mask,
+        small_cam, small_cam)
+    if cov_frac > 0.95:
+        assert int(jnp.sum(w.rerender_tile)) <= small_cam.num_tiles // 4
+
+
+def test_small_motion_mostly_interpolated(small_scene, small_cam):
+    cfg = RenderConfig(window=10)
+    poses = dolly_trajectory(3, start=(0.0, -0.3, -2.0),
+                             target=(0.0, 0.0, 6.0))
+    res = render_trajectory(small_scene, small_cam, poses, cfg)
+    rec1 = res.records[1]
+    t = small_cam.num_tiles
+    # Border tiles of this scene are partially uncovered (low opacity) and
+    # legitimately re-render; the covered interior must be warpable.
+    assert int(rec1.tiles_interpolated) >= t // 3, \
+        "2cm camera step should keep covered tiles warpable"
+    assert int(rec1.tiles_interpolated) + int(rec1.active.sum()) == t
+
+
+def test_sparse_frame_quality(small_scene, small_cam):
+    """A warped frame must stay within a few dB of the full render."""
+    cfg = RenderConfig(window=10)
+    poses = dolly_trajectory(4, start=(0.0, -0.3, -2.0),
+                             target=(0.0, 0.0, 6.0))
+    res = render_trajectory(small_scene, small_cam, poses, cfg)
+    full = jax.jit(render_full_frame, static_argnames="cfg")
+    for f in range(1, 4):
+        out, _, _ = full(small_scene, small_cam.with_pose(poses[f]), cfg=cfg)
+        q = float(psnr(res.frames[f], out.rgb))
+        assert q > 24.0, f"frame {f}: psnr {q}"
+
+
+def test_mask_improves_long_chains(small_scene, small_cam):
+    """No-cumulative-error mask (Fig. 7): after many consecutive warps the
+    masked variant must not be worse than the unmasked one."""
+    poses = dolly_trajectory(8, start=(0.0, -0.3, -2.0),
+                             target=(0.0, 0.0, 6.0))
+    full = jax.jit(render_full_frame, static_argnames="cfg")
+
+    def final_quality(use_mask):
+        cfg = RenderConfig(window=100, use_mask=use_mask)
+        res = render_trajectory(small_scene, small_cam, poses, cfg)
+        out, _, _ = full(small_scene, small_cam.with_pose(poses[-1]), cfg=cfg)
+        return float(psnr(res.frames[-1], out.rgb))
+
+    q_mask = final_quality(True)
+    q_nomask = final_quality(False)
+    assert q_mask >= q_nomask - 0.3, (q_mask, q_nomask)
+
+
+def test_dpes_culling_barely_changes_image(small_scene, small_cam):
+    poses = dolly_trajectory(3, start=(0.0, -0.3, -2.0),
+                             target=(0.0, 0.0, 6.0))
+    frames = {}
+    pairs = {}
+    for use in (True, False):
+        cfg = RenderConfig(window=10, use_dpes=use)
+        res = render_trajectory(small_scene, small_cam, poses, cfg)
+        frames[use] = res.frames[-1]
+        pairs[use] = int(res.records[-1].sort_pairs.sum())
+    q = float(psnr(frames[True], frames[False]))
+    assert q > 30.0, f"DPES changed the image too much: {q} dB"
+    assert pairs[True] <= pairs[False]
+
+
+def test_rerender_capacity_overflow_counted(small_scene, small_cam):
+    cfg = RenderConfig(window=10, rerender_capacity=1)
+    poses = orbit_trajectory(2, radius=7.0, target=(0.0, 0.0, 6.0))
+    res = render_trajectory(small_scene, small_cam, poses, cfg)
+    rec = res.records[1]
+    # with capacity 1, any additional re-render tiles must be counted
+    assert int(rec.active.sum()) <= 1
+    assert int(rec.overflow_tiles) >= 0
+
+
+def test_inpaint_fills_all_holes():
+    key = jax.random.PRNGKey(0)
+    img = jax.random.uniform(key, (32, 32, 3))
+    filled = jnp.ones((32, 32), bool).at[10:14, 10:14].set(False)
+    out = warp_mod.inpaint(img, filled, iters=8)
+    assert not bool(jnp.isnan(out).any())
+    # holes got plausible values (neighbor average stays in range)
+    hole = out[10:14, 10:14]
+    assert float(hole.min()) >= 0.0 and float(hole.max()) <= 1.0
+    # valid pixels untouched
+    np.testing.assert_allclose(np.where(np.asarray(filled)[..., None],
+                                        np.asarray(out), 0),
+                               np.where(np.asarray(filled)[..., None],
+                                        np.asarray(img), 0))
