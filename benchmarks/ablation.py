@@ -37,8 +37,8 @@ def run() -> List[dict]:
             w = _work(res.records, n_pixels)
             if work_base is None:
                 work_base = w
-            pairs = float(np.mean(
-                [np.asarray(r.sort_pairs).sum() for r in res.records]))
+            pairs = float(
+                np.asarray(res.records.sort_pairs).sum(axis=1).mean())
             rows.append({
                 "bench": "fig13b_ablation", "scene": scene_name,
                 "config": name,

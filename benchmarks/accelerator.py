@@ -19,10 +19,10 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import camera, records_to_framework, scenes, trajectory
+from benchmarks.common import camera, scenes, trajectory
 from repro.core.pipeline import RenderConfig, render_trajectory
-from repro.core.streaming import AcceleratorConfig, simulate_sequence, \
-    throughput
+from repro.core.streaming import AcceleratorConfig, frameworks_from_stacked, \
+    simulate_sequence, throughput
 
 N_FRAMES = 12
 
@@ -51,8 +51,9 @@ def run() -> List[dict]:
         poses = trajectory("indoor" if scene_name != "outdoor" else
                            "outdoor", N_FRAMES)
         res = render_trajectory(scene, cam, poses, RenderConfig(window=1))
-        frames = records_to_framework(res.records, cam.tiles_x, cam.tiles_y,
-                                      cam.width * cam.height)
+        frames = frameworks_from_stacked(res.records, cam.tiles_x,
+                                         cam.tiles_y,
+                                         cam.width * cam.height)
         base_cycles = None
         for mode, kw in MODES.items():
             t = throughput(simulate_sequence(frames, acfg, **kw),

@@ -16,8 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.camera import TILE, make_camera
-from repro.core.pipeline import FrameRecord
-from repro.core.streaming import FrameWork
+from repro.core.pipeline import StackedRecords
+from repro.core.streaming import FrameWork, frameworks_from_stacked
 from repro.scenes.synthetic import random_blob_scene, structured_scene
 from repro.scenes.trajectory import dolly_trajectory, orbit_trajectory
 
@@ -45,21 +45,14 @@ def trajectory(kind: str, n_frames: int):
     return orbit_trajectory(n_frames, radius=7.0, target=(0.0, 0.0, 6.0))
 
 
-def records_to_framework(records: List[FrameRecord], tiles_x: int,
-                         tiles_y: int, n_pixels: int) -> List[FrameWork]:
-    out = []
-    for r in records:
-        full = bool(r.is_full)
-        out.append(FrameWork(
-            n_gaussians=int(r.n_gaussians),
-            candidate_pairs=int(r.candidate_pairs),
-            raw_pairs=np.asarray(r.raw_pairs),
-            sort_pairs=np.asarray(r.sort_pairs),
-            raster_pairs=np.asarray(r.raster_pairs),
-            active=np.asarray(r.active),
-            n_warp_pixels=0 if full else n_pixels,
-            tiles_x=tiles_x, tiles_y=tiles_y))
-    return out
+def records_to_framework(records, tiles_x: int, tiles_y: int,
+                         n_pixels: int) -> List[FrameWork]:
+    """Trajectory records -> simulator frames. Accepts the scanned
+    engine's stacked records (the fast path: one host transfer per
+    field) or a legacy ``List[FrameRecord]``."""
+    if isinstance(records, (list, tuple)):
+        records = StackedRecords.from_list(list(records))
+    return frameworks_from_stacked(records, tiles_x, tiles_y, n_pixels)
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:

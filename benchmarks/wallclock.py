@@ -1,5 +1,7 @@
 """Measured wall-clock of the jitted pipeline (ours, CPU): full render vs
-TWSR sparse frame vs the Pallas-kernel raster stage in isolation."""
+TWSR sparse frame vs the Pallas-kernel raster stage in isolation, plus the
+scanned streaming engine (one executable per trajectory) against the
+legacy per-frame dispatch loop."""
 from __future__ import annotations
 
 import functools
@@ -9,9 +11,13 @@ import jax
 
 from benchmarks.common import camera, scenes, timed, trajectory
 from repro.core import binning, intersect, projection
+from repro.core.engine import render_streams
 from repro.core.pipeline import (RenderConfig, render_full_frame,
-                                 render_sparse_frame)
+                                 render_sparse_frame, render_trajectory,
+                                 render_trajectory_py)
 from repro.kernels import ops as kops
+
+N_TRAJ_FRAMES = 8
 
 
 def run() -> List[dict]:
@@ -47,4 +53,28 @@ def run() -> List[dict]:
         rows.append({"bench": "wallclock", "stage": f"raster_{impl}",
                      "us_per_call": round(t * 1e6, 1),
                      "derived": "interpret-mode" if impl == "pallas" else ""})
+
+    # scanned engine (one executable, stacked records) vs the legacy
+    # per-frame dispatch loop — the "no host roundtrips" claim in numbers.
+    poses_t = trajectory("indoor", N_TRAJ_FRAMES)
+    t_py = timed(lambda: render_trajectory_py(scene, cam, poses_t,
+                                              cfg).frames)
+    t_scan = timed(lambda: render_trajectory(scene, cam, poses_t,
+                                             cfg).frames)
+    per_frame = 1e6 / N_TRAJ_FRAMES
+    rows.append({"bench": "wallclock", "stage": "trajectory_py_loop",
+                 "us_per_call": round(t_py * per_frame, 1),
+                 "derived": f"{N_TRAJ_FRAMES}-frame loop, per frame"})
+    rows.append({"bench": "wallclock", "stage": "trajectory_scan",
+                 "us_per_call": round(t_scan * per_frame, 1),
+                 "derived": f"speedup={t_py / t_scan:.2f}x vs py loop"})
+
+    # batched multi-stream serving: 4 staggered streams in one vmap
+    import jax.numpy as jnp
+    poses_b = jnp.stack([poses_t] * 4)
+    t_streams = timed(lambda: render_streams(scene, cam, poses_b,
+                                             cfg).frames)
+    rows.append({"bench": "wallclock", "stage": "trajectory_streams_b4",
+                 "us_per_call": round(t_streams * per_frame / 4, 1),
+                 "derived": "per stream-frame, B=4 vmap"})
     return rows

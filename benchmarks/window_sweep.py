@@ -22,16 +22,17 @@ N_FRAMES = 18
 
 
 def _work(records, n_pixels) -> float:
-    """Scalar GPU-equivalent work (cycles in the simulator's units)."""
-    total = 0.0
-    for r in records:
-        total += int(r.n_gaussians) / 2.0
-        total += int(r.candidate_pairs) / 32.0
-        total += float(np.asarray(r.sort_pairs).sum()) / 64.0
-        total += float(np.asarray(r.raster_pairs).sum())
-        if not bool(r.is_full):
-            total += n_pixels / 8.0
-    return total
+    """Scalar GPU-equivalent work (cycles in the simulator's units).
+
+    Vectorized over the stacked (F, ...) record arrays of the scanned
+    engine — no per-frame host transfers.
+    """
+    n_sparse = int((~np.asarray(records.is_full)).sum())
+    return (float(np.asarray(records.n_gaussians).sum()) / 2.0
+            + float(np.asarray(records.candidate_pairs).sum()) / 32.0
+            + float(np.asarray(records.sort_pairs).sum()) / 64.0
+            + float(np.asarray(records.raster_pairs).sum())
+            + n_sparse * n_pixels / 8.0)
 
 
 def run() -> List[dict]:

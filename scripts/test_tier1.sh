@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the fast suite (everything except @pytest.mark.slow).
+# Runs in a couple of minutes on CPU; the full suite (tier 2) is plain
+# `python -m pytest`. See ROADMAP.md "Testing tiers".
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python -m pytest -q -m "not slow" "$@"

@@ -5,15 +5,17 @@ in between, each frame is produced by viewpoint transformation (warp) +
 tile-level decisions — interpolated tiles skip preprocess/sort/raster
 entirely, re-rendered tiles go through the pipeline with DPES depth culling.
 
-``render_trajectory`` is the reference driver; per-frame work summaries
-(``FrameRecord``) feed both the GPU-style cost model and the streaming
-accelerator simulator (core/streaming.py).
+``render_trajectory`` (core/engine.py) is the production driver — the
+whole loop as one jitted ``lax.scan``; ``render_trajectory_py`` below is
+the host-side reference loop kept for golden comparison. Per-frame work
+summaries (``FrameRecord``) feed both the GPU-style cost model and the
+streaming accelerator simulator (core/streaming.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -227,22 +229,83 @@ def render_sparse_frame(scene, ref_cam: Camera, tgt_cam: Camera,
     return rgb_final, new_state, rec
 
 
+class StackedRecords:
+    """Scan-stacked per-frame records.
+
+    Every ``FrameRecord`` field carries a leading frame axis ``(F, ...)``
+    (or ``(B, F, ...)`` for multi-stream renders) — the natural output
+    layout of ``lax.scan``, and one host transfer per trajectory instead
+    of one per frame. Attribute access returns the stacked array
+    (``records.raster_pairs`` -> ``(F, T)``); indexing recovers a
+    per-frame ``FrameRecord`` view (``records[i].raster_pairs`` ->
+    ``(T,)``).
+    """
+
+    __slots__ = ("stacked",)
+
+    def __init__(self, stacked: FrameRecord):
+        self.stacked = stacked
+
+    @classmethod
+    def from_list(cls, records: Sequence[FrameRecord]) -> "StackedRecords":
+        return cls(jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *records))
+
+    def __len__(self) -> int:
+        return int(self.stacked.is_full.shape[0])
+
+    def __getitem__(self, i) -> FrameRecord:
+        return jax.tree_util.tree_map(lambda a: a[i], self.stacked)
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self[i]
+
+    def __getattr__(self, name):
+        return getattr(self.stacked, name)
+
+
 class TrajectoryResult(NamedTuple):
     frames: jax.Array              # (F, H, W, 3)
-    records: List[FrameRecord]
-    states: Optional[List[FrameState]]
+    records: StackedRecords
+    states: Optional[FrameState]   # stacked (F, ...) when keep_states
 
 
 def render_trajectory(scene, cam: Camera, poses: jax.Array,
-                      cfg: RenderConfig, *, keep_states: bool = False
+                      cfg: RenderConfig, *, keep_states: bool = False,
+                      phase: Union[int, jax.Array] = 0
                       ) -> TrajectoryResult:
     """Render a pose sequence with the LS-Gaussian streaming loop.
 
+    Delegates to the scanned engine (core/engine.py): the full/sparse
+    loop compiles to ONE executable with no per-frame host dispatch.
     poses: (F, 4, 4) world-to-camera per frame. Frame f is fully rendered
-    when f % cfg.window == 0, warped otherwise.
+    when (f + phase) % cfg.window == 0, warped otherwise.
     """
-    full_fn = jax.jit(functools.partial(render_full_frame, cfg=cfg))
-    sparse_fn = jax.jit(functools.partial(render_sparse_frame, cfg=cfg))
+    from repro.core import engine  # local import: engine builds on us
+    return engine.render_trajectory(scene, cam, poses, cfg,
+                                    keep_states=keep_states, phase=phase)
+
+
+@functools.lru_cache(maxsize=16)
+def _legacy_frame_fns(cfg: RenderConfig):
+    """Per-config jitted frame functions for the legacy loop. Cached so
+    repeated calls (and wall-clock timings) hit warm jit caches instead
+    of re-tracing fresh wrappers every trajectory."""
+    return (jax.jit(functools.partial(render_full_frame, cfg=cfg)),
+            jax.jit(functools.partial(render_sparse_frame, cfg=cfg)))
+
+
+def render_trajectory_py(scene, cam: Camera, poses: jax.Array,
+                         cfg: RenderConfig, *, keep_states: bool = False
+                         ) -> TrajectoryResult:
+    """Legacy host-side driver: one jitted dispatch per frame.
+
+    Kept as the golden reference for the scanned engine (it is the
+    original, straightforwardly-auditable loop). Frame f is fully
+    rendered when f % cfg.window == 0, warped otherwise.
+    """
+    full_fn, sparse_fn = _legacy_frame_fns(cfg)
 
     frames, records, states = [], [], []
     state = None
@@ -259,5 +322,8 @@ def render_trajectory(scene, cam: Camera, poses: jax.Array,
         records.append(rec)
         if keep_states:
             states.append(state)
-    return TrajectoryResult(frames=jnp.stack(frames), records=records,
-                            states=states if keep_states else None)
+    stacked_states = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *states) if keep_states else None
+    return TrajectoryResult(frames=jnp.stack(frames),
+                            records=StackedRecords.from_list(records),
+                            states=stacked_states)

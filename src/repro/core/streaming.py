@@ -68,6 +68,39 @@ class FrameWork:
     tiles_y: int = 0
 
 
+def frameworks_from_stacked(records, tiles_x: int, tiles_y: int,
+                            n_pixels: int) -> List[FrameWork]:
+    """Stacked per-frame record arrays -> per-frame ``FrameWork`` list.
+
+    ``records`` is anything exposing the scanned engine's stacked
+    ``FrameRecord`` fields with a leading frame axis ``(F, ...)``
+    (``pipeline.StackedRecords`` or the raw stacked NamedTuple). The
+    whole trajectory crosses the host boundary in one transfer per
+    field, instead of one per frame as with ``List[FrameRecord]``.
+    """
+    is_full = np.asarray(records.is_full)
+    if is_full.ndim != 1:
+        raise ValueError(
+            f"expected single-trajectory records with (F, ...) fields, got "
+            f"is_full shape {is_full.shape}; for multi-stream (B, F, ...) "
+            f"records pass one stream at a time, e.g. "
+            f"frameworks_from_stacked(StackedRecords(records[i]), ...)")
+    n_gaussians = np.asarray(records.n_gaussians)
+    candidate = np.asarray(records.candidate_pairs)
+    raw = np.asarray(records.raw_pairs)
+    sort = np.asarray(records.sort_pairs)
+    raster = np.asarray(records.raster_pairs)
+    active = np.asarray(records.active)
+    return [FrameWork(
+        n_gaussians=int(n_gaussians[f]),
+        candidate_pairs=int(candidate[f]),
+        raw_pairs=raw[f], sort_pairs=sort[f], raster_pairs=raster[f],
+        active=active[f],
+        n_warp_pixels=0 if is_full[f] else n_pixels,
+        tiles_x=tiles_x, tiles_y=tiles_y)
+        for f in range(is_full.shape[0])]
+
+
 @dataclasses.dataclass
 class FrameTiming:
     prep_end: float

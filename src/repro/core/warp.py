@@ -18,7 +18,9 @@ source-validity mask), reproject it into the target viewpoint:
      as sources for the *next* frame's warp ("TW w/ mask", Fig. 7).
 
 Everything is shape-static: tile decisions are boolean masks over the fixed
-tile grid, so the whole transform jits and shards.
+tile grid, so the whole transform jits and shards — and, because no shape
+depends on a traced value, it is a valid ``lax.scan`` body and batches
+under ``vmap`` (the scanned engine in core/engine.py relies on both).
 """
 from __future__ import annotations
 
@@ -71,6 +73,27 @@ def _scatter_zbuffer(ti: jax.Array, z: jax.Array, valid: jax.Array,
     return jnp.where(hit, zmin, 0.0), out, hit
 
 
+def _project_points(ref_cam: Camera, depth_map: jax.Array, mask: jax.Array,
+                    tgt_cam: Camera, near: float):
+    """Back-project ``depth_map`` and reproject into the target view.
+
+    Returns (ti, z, valid): (S,) flat target pixel index, target-view
+    depth, and source validity (mask & in front & in bounds).
+    """
+    h, w = depth_map.shape
+    pts = backproject(ref_cam, depth_map)                   # (H, W, 3)
+    rot, t = tgt_cam.w2c[:3, :3], tgt_cam.w2c[:3, 3]
+    pc = pts.reshape(-1, 3) @ rot.T + t
+    z = pc[:, 2]
+    u = tgt_cam.fx * pc[:, 0] / jnp.maximum(z, near) + tgt_cam.cx
+    v = tgt_cam.fy * pc[:, 1] / jnp.maximum(z, near) + tgt_cam.cy
+    ui = jnp.floor(u).astype(jnp.int32)
+    vi = jnp.floor(v).astype(jnp.int32)
+    in_bounds = (ui >= 0) & (ui < w) & (vi >= 0) & (vi < h)
+    valid = mask.reshape(-1) & (z > near) & in_bounds
+    return vi * w + ui, z, valid
+
+
 def viewpoint_transform(ref_rgb: jax.Array, ref_exp_depth: jax.Array,
                         ref_trunc_depth: jax.Array, ref_source_mask: jax.Array,
                         ref_cam: Camera, tgt_cam: Camera, *,
@@ -81,17 +104,8 @@ def viewpoint_transform(ref_rgb: jax.Array, ref_exp_depth: jax.Array,
     size = h * w
 
     # --- 1. ProjectTo3D + 2. ViewTransfer/Reproject ----------------------
-    pts = backproject(ref_cam, ref_exp_depth)               # (H, W, 3)
-    rot, t = tgt_cam.w2c[:3, :3], tgt_cam.w2c[:3, 3]
-    pc = pts.reshape(-1, 3) @ rot.T + t
-    z = pc[:, 2]
-    u = tgt_cam.fx * pc[:, 0] / jnp.maximum(z, near) + tgt_cam.cx
-    v = tgt_cam.fy * pc[:, 1] / jnp.maximum(z, near) + tgt_cam.cy
-    ui = jnp.floor(u).astype(jnp.int32)
-    vi = jnp.floor(v).astype(jnp.int32)
-    in_bounds = (ui >= 0) & (ui < w) & (vi >= 0) & (vi < h)
-    src_valid = ref_source_mask.reshape(-1) & (z > near) & in_bounds
-    ti = vi * w + ui
+    ti, z, src_valid = _project_points(ref_cam, ref_exp_depth,
+                                       ref_source_mask, tgt_cam, near)
 
     # Color + the pixel's own scene depth ride the same z-buffer.
     payload = jnp.concatenate(
@@ -106,16 +120,9 @@ def viewpoint_transform(ref_rgb: jax.Array, ref_exp_depth: jax.Array,
     exp_depth_t = zmap.reshape(h, w)
 
     # --- truncated-depth point cloud (separate cloud, max-scatter) -------
-    pts_max = backproject(ref_cam, ref_trunc_depth)
-    pm = pts_max.reshape(-1, 3) @ rot.T + t
-    zm = pm[:, 2]
-    um = tgt_cam.fx * pm[:, 0] / jnp.maximum(zm, near) + tgt_cam.cx
-    vm = tgt_cam.fy * pm[:, 1] / jnp.maximum(zm, near) + tgt_cam.cy
-    umi = jnp.floor(um).astype(jnp.int32)
-    vmi = jnp.floor(vm).astype(jnp.int32)
-    mvalid = ref_source_mask.reshape(-1) & (zm > near) & \
-        (umi >= 0) & (umi < w) & (vmi >= 0) & (vmi < h)
-    tim = jnp.where(mvalid, vmi * w + umi, 0)
+    tim_raw, zm, mvalid = _project_points(ref_cam, ref_trunc_depth,
+                                          ref_source_mask, tgt_cam, near)
+    tim = jnp.where(mvalid, tim_raw, 0)
     trunc_t = jnp.zeros((size,)).at[tim].max(
         jnp.where(mvalid, zm, 0.0), mode="drop").reshape(h, w)
 

@@ -1,5 +1,12 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see ONE device;
 the 512-device override belongs exclusively to launch/dryrun.py."""
+import os
+import sys
+
+# Make sibling test helpers (tests/_hypothesis_compat.py) importable under
+# every pytest import mode.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
 import jax
 import jax.numpy as jnp
 import pytest

@@ -8,7 +8,15 @@ from repro.kernels.ref import tile_sort_ref
 from repro.kernels.tile_sort import tile_sort_pallas
 
 
-@pytest.mark.parametrize("t,k", [(4, 16), (8, 64), (3, 100), (16, 256)])
+# The larger networks take minutes-to-hours under Pallas interpret mode on
+# CPU: tier-1 keeps the smallest case, tier 2 (-m slow / plain pytest with
+# no marker filter) covers the rest.
+@pytest.mark.parametrize("t,k", [
+    (4, 16),
+    pytest.param(8, 64, marks=pytest.mark.slow),
+    pytest.param(3, 100, marks=pytest.mark.slow),
+    pytest.param(16, 256, marks=pytest.mark.slow),
+])
 def test_bitonic_matches_argsort(t, k):
     key = jax.random.PRNGKey(t * 1000 + k)
     keys = jax.random.uniform(key, (t, k), minval=0.0, maxval=50.0)

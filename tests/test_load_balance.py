@@ -1,7 +1,7 @@
 """LDU scheduling invariants (paper Sec. V-B) + hypothesis properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.load_balance import Schedule, load_stats, morton_order, schedule
 from repro.core.streaming import (AcceleratorConfig, FrameWork,

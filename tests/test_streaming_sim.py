@@ -1,0 +1,117 @@
+"""Accelerator-simulator invariants (core/streaming.py) on the ablation
+workloads: streaming never loses to a frame barrier, utilization stays a
+valid fraction, and light-to-heavy ordering never hurts sort stalls."""
+import numpy as np
+import pytest
+
+from repro.core.streaming import (AcceleratorConfig, FrameWork,
+                                  frameworks_from_stacked,
+                                  simulate_sequence, throughput)
+
+# The benchmark ablation ladder (benchmarks/accelerator.py MODES).
+MODES = {
+    "gpu_like": dict(policy="dynamic", workload_source="raw",
+                     light_to_heavy=False),
+    "gscore_like": dict(policy="round_robin", workload_source="raw",
+                        light_to_heavy=False),
+    "ld1": dict(policy="ls_gaussian", workload_source="dpes",
+                light_to_heavy=False),
+    "ls_gaussian": dict(policy="ls_gaussian", workload_source="dpes",
+                        light_to_heavy=True),
+}
+
+
+def _ablation_frames(seed, n_frames=6, t=256, heavy_frac=0.08,
+                     sparse_every=0):
+    """Fig. 5-style order-of-magnitude tile-load spread; optionally every
+    ``sparse_every``-th frame is TWSR-sparse (inactive tiles + warp)."""
+    rng = np.random.default_rng(seed)
+    frames = []
+    for f in range(n_frames):
+        w = rng.integers(20, 80, size=t).astype(np.int64)
+        heavy = rng.choice(t, int(t * heavy_frac), replace=False)
+        w[heavy] = rng.integers(300, 700, size=len(heavy))
+        active = np.ones(t, bool)
+        warp_px = 0
+        if sparse_every and f % sparse_every != 0:
+            active = rng.random(t) < 0.3
+            w = np.where(active, w, 0)
+            warp_px = t * 256
+        frames.append(FrameWork(
+            n_gaussians=2000, candidate_pairs=int(w.sum() * 1.2),
+            raw_pairs=w * 2, sort_pairs=w, raster_pairs=w, active=active,
+            n_warp_pixels=warp_px, tiles_x=16, tiles_y=16))
+    return frames
+
+
+def _wall_span(timings):
+    return max(t.frame_end for t in timings)
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("sparse_every", [0, 3])
+def test_streaming_never_slower(mode, sparse_every):
+    """Removing the global frame barrier can only overlap work: the wall
+    span of the sequence must never grow."""
+    frames = _ablation_frames(7, sparse_every=sparse_every)
+    cfg = AcceleratorConfig(num_blocks=32)
+    kw = MODES[mode]
+    stream = simulate_sequence(frames, cfg, streaming=True, **kw)
+    barrier = simulate_sequence(frames, cfg, streaming=False, **kw)
+    assert _wall_span(stream) <= _wall_span(barrier) + 1e-6, mode
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("streaming", [True, False])
+def test_utilization_bounds(mode, streaming):
+    frames = _ablation_frames(11, sparse_every=3)
+    cfg = AcceleratorConfig(num_blocks=32)
+    timings = simulate_sequence(frames, cfg, streaming=streaming,
+                                **MODES[mode])
+    t = throughput(timings, cfg.num_blocks)
+    assert 0.0 < t["utilization"] <= 1.0 + 1e-9, (mode, t["utilization"])
+    for ft in timings:
+        assert 0.0 < ft.utilization <= 1.0 + 1e-9
+        assert ft.frame_end >= ft.prep_end
+
+
+@pytest.mark.parametrize("seed", [3, 13, 23])
+@pytest.mark.parametrize("gsu_rate", [2.0, 8.0, 64.0])
+def test_light_to_heavy_never_increases_sort_stall(seed, gsu_rate):
+    """LD2's whole point: serving light tiles first can only shrink the
+    time blocks spend waiting on the shared sorter."""
+    frames = _ablation_frames(seed)
+    cfg = AcceleratorConfig(num_blocks=32, gsu_rate=gsu_rate)
+    with_ld2 = throughput(simulate_sequence(
+        frames, cfg, policy="ls_gaussian", workload_source="dpes",
+        light_to_heavy=True), cfg.num_blocks)
+    without = throughput(simulate_sequence(
+        frames, cfg, policy="ls_gaussian", workload_source="dpes",
+        light_to_heavy=False), cfg.num_blocks)
+    assert with_ld2["sort_stall"] <= without["sort_stall"] + 1e-6
+
+
+def test_invariants_on_real_records(small_scene, small_cam):
+    """The same invariants hold on records from the real scanned pipeline
+    (stacked-record ingestion path)."""
+    from repro.core.engine import render_trajectory
+    from repro.core.pipeline import RenderConfig
+    from repro.scenes.trajectory import dolly_trajectory
+
+    poses = dolly_trajectory(4, start=(0.0, -0.3, -2.0),
+                             target=(0.0, 0.0, 6.0))
+    res = render_trajectory(small_scene, small_cam, poses,
+                            RenderConfig(window=2))
+    frames = frameworks_from_stacked(
+        res.records, small_cam.tiles_x, small_cam.tiles_y,
+        small_cam.width * small_cam.height)
+    assert len(frames) == 4
+    assert frames[0].n_warp_pixels == 0          # full frame: no VTU work
+    assert frames[1].n_warp_pixels > 0           # sparse frame warps
+    cfg = AcceleratorConfig(num_blocks=8)
+    for mode, kw in MODES.items():
+        stream = simulate_sequence(frames, cfg, streaming=True, **kw)
+        barrier = simulate_sequence(frames, cfg, streaming=False, **kw)
+        assert _wall_span(stream) <= _wall_span(barrier) + 1e-6, mode
+        t = throughput(stream, cfg.num_blocks)
+        assert 0.0 < t["utilization"] <= 1.0 + 1e-9, mode
