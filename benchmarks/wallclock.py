@@ -1,10 +1,18 @@
 """Measured wall-clock of the jitted pipeline (ours, CPU): full render vs
-TWSR sparse frame vs the Pallas-kernel raster stage in isolation, plus the
+TWSR sparse frame vs the Pallas-kernel raster stage in isolation, the
+dense vs plan-compacted sparse path across re-render ratios (the TilePlan
+claim: intersect/bin/sort/raster cost scales with R, not T), plus the
 scanned streaming engine (one executable per trajectory) against the
-legacy per-frame dispatch loop."""
+legacy per-frame dispatch loop.
+
+The dense-vs-compacted sweep is also written to
+``experiments/artifacts/plan_compaction.json`` (overwritten per run) so
+the speedup numbers ride along with the repo."""
 from __future__ import annotations
 
 import functools
+import json
+import os
 from typing import List
 
 import jax
@@ -18,6 +26,46 @@ from repro.core.pipeline import (RenderConfig, render_full_frame,
 from repro.kernels import ops as kops
 
 N_TRAJ_FRAMES = 8
+# Plan slot counts for the compaction sweep (camera has 144 tiles).
+PLAN_CAPS = (9, 18, 36, 72)
+
+_ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "artifacts", "plan_compaction.json")
+
+
+def _plan_compaction_rows(scene, cam, poses) -> List[dict]:
+    """Dense (R = T) vs plan-compacted (R = rerender_capacity) sparse
+    frames: same warp, same composition — only the planned slot count
+    changes, so the delta is the cost of the T-shaped stages."""
+    t = cam.num_tiles
+    rows = []
+
+    # One keyframe state shared by every capacity: render_full_frame does
+    # not read rerender_capacity, so re-rendering it per rcap would only
+    # add redundant jit traces.
+    key_cfg = RenderConfig(window=5)
+    full_fn = jax.jit(functools.partial(render_full_frame, cfg=key_cfg))
+    _, state, _ = full_fn(scene, cam.with_pose(poses[0]))
+
+    def sparse_time(rcap):
+        cfg = RenderConfig(window=5, rerender_capacity=rcap)
+        fn = jax.jit(functools.partial(render_sparse_frame, cfg=cfg))
+        return timed(lambda: fn(scene, cam.with_pose(poses[0]),
+                                cam.with_pose(poses[1]), state))
+
+    t_dense = sparse_time(None)
+    rows.append({"bench": "plan_compaction", "stage": "sparse_dense",
+                 "plan_slots": t, "rerender_ratio": 1.0,
+                 "us_per_call": round(t_dense * 1e6, 1),
+                 "derived": "R=T reference"})
+    for rcap in PLAN_CAPS:
+        t_r = sparse_time(rcap)
+        rows.append({
+            "bench": "plan_compaction", "stage": f"sparse_plan_r{rcap}",
+            "plan_slots": rcap, "rerender_ratio": round(rcap / t, 3),
+            "us_per_call": round(t_r * 1e6, 1),
+            "derived": f"speedup={t_dense / t_r:.2f}x vs dense"})
+    return rows
 
 
 def run() -> List[dict]:
@@ -39,6 +87,13 @@ def run() -> List[dict]:
     rows.append({"bench": "wallclock", "stage": "sparse_frame",
                  "us_per_call": round(t_sparse * 1e6, 1),
                  "derived": f"speedup={t_full / t_sparse:.2f}x"})
+
+    # dense vs plan-compacted sparse frames across re-render ratios
+    plan_rows = _plan_compaction_rows(scene, cam, poses)
+    rows.extend(plan_rows)
+    os.makedirs(os.path.dirname(_ARTIFACT), exist_ok=True)
+    with open(_ARTIFACT, "w") as f:
+        json.dump(plan_rows, f, indent=1)
 
     # isolated raster stage via bins (jnp_chunked vs pallas-interpret)
     proj = projection.preprocess(scene, cam)

@@ -2,11 +2,14 @@
 
 GPU 3DGS builds dynamically-sized per-tile pair lists with a global radix
 sort over (tileID | depth) keys. That shape-dynamic pattern does not map to
-TPU/XLA; instead we keep a dense (N, T) intersection mask and extract, per
-tile, the indices of the K nearest intersecting Gaussians in depth order
-(fixed capacity K, overflow counted — see DESIGN.md §3).
+TPU/XLA; instead we keep a dense intersection mask and extract, per tile,
+the indices of the K nearest intersecting Gaussians in depth order (fixed
+capacity K, overflow counted — see DESIGN.md §3).
 
-The resulting (T, K) gather indices + validity mask are what the Pallas
+Everything here is row-agnostic: the plan-driven renderer passes an
+(N, R) plan-masked mask and gets (R, K) compacted bins for the TilePlan's
+R slots (DESIGN.md §2); the dense reference path passes (N, T) and gets
+(T, K). The gather indices + validity mask are what the Pallas
 rasterizer consumes.
 """
 from __future__ import annotations
@@ -44,12 +47,13 @@ class TileGaussians(NamedTuple):
 
 def build_tile_bins(mask_nt: jax.Array, depth: jax.Array, capacity: int,
                     *, depth_limit: jax.Array | None = None) -> TileBins:
-    """Select and depth-sort up to ``capacity`` Gaussians per tile.
+    """Select and depth-sort up to ``capacity`` Gaussians per tile/slot.
 
-    mask_nt: (N, T) intersection mask; depth: (N,) camera z.
-    depth_limit: optional (T,) per-tile early-stop depth from DPES — pairs
-    beyond it are culled *before* sorting (paper Sec. IV-B: "Any Gaussians
-    beyond this depth will not be involved in sorting").
+    mask_nt: (N, T) intersection mask — or (N, R) for a plan's compacted
+    slots; depth: (N,) camera z.
+    depth_limit: optional (T,)/(R,) per-tile early-stop depth from DPES —
+    pairs beyond it are culled *before* sorting (paper Sec. IV-B: "Any
+    Gaussians beyond this depth will not be involved in sorting").
     """
     n = mask_nt.shape[0]
     mask_tn = mask_nt.T                                       # (T, N)

@@ -7,15 +7,19 @@ exactly the global-sync barrier the paper's streaming design argues
 against. This module folds the whole full/sparse streaming loop into a
 single ``lax.scan`` so an entire trajectory compiles ONCE and runs with
 no host involvement, and ``jax.vmap``s that scan over a leading stream
-axis for batched multi-user serving.
+axis for batched multi-user serving. Both frame branches are thin
+wrappers over the plan-driven ``pipeline.render_planned_frame`` — the
+TilePlan construction AND the device-LDU schedule it records run inside
+this scan (DESIGN.md §2).
 
 Scan carry layout (``EngineCarry``):
 
   state     : ``FrameState`` — the reference frame a sparse frame warps
               from (rgb, expected depth, truncated depth, source mask,
-              position-in-window counter). Legacy semantics are kept:
-              ``state.frame_idx`` resets to 0 on a full render and
-              increments on sparse frames.
+              true global frame index). ``state.frame_idx`` carries the
+              real frame number: key frames receive it explicitly (a
+              mid-trajectory key frame must NOT reset the counter) and
+              sparse frames increment it.
   prev_pose : (4, 4) world-to-camera of the previous frame — the warp's
               reference camera (the previous frame is always the
               reference, full or sparse).
@@ -99,7 +103,8 @@ def make_frame_step(scene, cam: Camera, cfg: RenderConfig,
         ref_cam = cam.with_pose(carry.prev_pose)
 
         def full_branch(state: FrameState):
-            out, new_state, rec = render_full_frame(scene, tgt_cam, cfg)
+            out, new_state, rec = render_full_frame(
+                scene, tgt_cam, cfg, frame_idx=carry.step)
             return out.rgb, new_state, rec
 
         def sparse_branch(state: FrameState):

@@ -1,7 +1,11 @@
 """Gaussian-tile intersection tests (paper Sec. IV-C).
 
 Four tests over the same (N gaussians x T tiles) domain, all returning a
-boolean mask (N, T):
+boolean mask (N, T). Every test reads only ``origins``/``centers`` from
+the grid argument, so they equally accept a compacted ``TileSlots`` view
+(``take_tiles``) and then return a plan-shaped (N, R) mask — this is how
+the plan-driven renderer (core/pipeline.py) makes sparse-frame intersect
+cost scale with the re-render slot count R instead of T:
 
 - ``aabb_mask``    : original 3DGS — circumscribed square of the 3-sigma
                      circle (coarse baseline, many false positives).
@@ -44,6 +48,19 @@ class TileGrid(NamedTuple):
     @property
     def num_tiles(self) -> int:
         return self.tiles_x * self.tiles_y
+
+
+class TileSlots(NamedTuple):
+    """Compacted view of R plan slots — duck-typed grid for the tests."""
+
+    centers: jax.Array  # (R, 2) pixel coords of slot tile centers
+    origins: jax.Array  # (R, 2) pixel coords of slot tile upper-left
+
+
+def take_tiles(grid: TileGrid, tile_ids: jax.Array) -> TileSlots:
+    """Gather the grid rows of a plan's tile ids: (T,)-world -> (R,)-world."""
+    return TileSlots(centers=grid.centers[tile_ids],
+                     origins=grid.origins[tile_ids])
 
 
 def make_tile_grid(cam: Camera) -> TileGrid:

@@ -1,30 +1,41 @@
-"""LS-Gaussian end-to-end renderer: full frames + TWSR sparse frames.
+"""LS-Gaussian end-to-end renderer: plan-driven full + TWSR sparse frames.
 
 The streaming loop (paper Fig. 1): one full render every ``window`` frames;
 in between, each frame is produced by viewpoint transformation (warp) +
 tile-level decisions — interpolated tiles skip preprocess/sort/raster
 entirely, re-rendered tiles go through the pipeline with DPES depth culling.
 
+Every frame renders through ONE shared stage pipeline,
+``render_planned_frame``: preprocess -> plan-masked intersect -> (R, K)
+compacted binning with DPES limits -> device-LDU schedule -> raster over
+the plan's R slots -> scatter back to the full frame. Full frames carry an
+all-tiles ``TilePlan`` (R = T); TWSR frames carry the warp-predicted
+re-render set compacted to ``R = rerender_capacity`` — so sparse-frame
+intersect/bin/sort/raster cost all scale with R instead of T (DESIGN.md
+§2). ``render_full_frame`` / ``render_sparse_frame`` are thin wrappers.
+
 ``render_trajectory`` (core/engine.py) is the production driver — the
 whole loop as one jitted ``lax.scan``; ``render_trajectory_py`` below is
 the host-side reference loop kept for golden comparison. Per-frame work
-summaries (``FrameRecord``) feed both the GPU-style cost model and the
+summaries (``FrameRecord``) — including the device-LDU block assignments
+and per-block load summaries — feed both the GPU-style cost model and the
 streaming accelerator simulator (core/streaming.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import binning, dpes, intersect, warp as warp_mod
+from repro.core import binning, intersect, warp as warp_mod
+from repro.core import plan as plan_mod
 from repro.core.camera import TILE, Camera
+from repro.core.plan import TilePlan
 from repro.core.projection import preprocess
-from repro.core.raster import RenderOutput, render_from_bins, untile
-from repro.kernels import ops as kops
+from repro.core.raster import RenderOutput, render_plan_slots, untile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,7 +52,8 @@ class RenderConfig:
     inpaint_iters: int = 8
     near: float = 0.05
     min_coverage: float = warp_mod.MIN_COVERAGE
-    rerender_capacity: Optional[int] = None  # static cap on re-render tiles
+    rerender_capacity: Optional[int] = None  # R: static cap on plan slots
+    ldu_blocks: int = 32                # B: parallel raster blocks (LDU)
 
 
 class FrameState(NamedTuple):
@@ -51,7 +63,7 @@ class FrameState(NamedTuple):
     exp_depth: jax.Array    # (H, W)
     trunc_depth: jax.Array  # (H, W)
     source_mask: jax.Array  # (H, W) bool — usable reprojection sources
-    frame_idx: jax.Array    # () int32
+    frame_idx: jax.Array    # () int32 — true global frame index
 
 
 class FrameRecord(NamedTuple):
@@ -67,6 +79,17 @@ class FrameRecord(NamedTuple):
     tiles_interpolated: jax.Array  # () int32
     overflow_pairs: jax.Array   # () int32 — bin-capacity overflow
     overflow_tiles: jax.Array   # () int32 — rerender_capacity overflow
+    block_of_tile: jax.Array    # (T,) int32 — device-LDU block (-1 = none)
+    order_in_block: jax.Array   # (T,) int32 — light-to-heavy position
+    block_load: jax.Array       # (B,) int32 — predicted pairs per block
+
+
+class PlanStats(NamedTuple):
+    """Per-slot counters from the shared stage pipeline (R-shaped)."""
+
+    candidate_pairs: jax.Array  # () int32 — stage-2 candidates on the plan
+    raw_slots: jax.Array        # (R,) pre-DPES pairs per slot
+    overflow_pairs: jax.Array   # () int32 — bin-capacity overflow
 
 
 def _tile_flag_to_pixels(flag: jax.Array, tiles_x: int, tiles_y: int):
@@ -76,119 +99,128 @@ def _tile_flag_to_pixels(flag: jax.Array, tiles_x: int, tiles_y: int):
     return untile(tiles, tiles_x, tiles_y)
 
 
-def render_full_frame(scene, cam: Camera, cfg: RenderConfig
-                      ) -> Tuple[RenderOutput, FrameState, FrameRecord]:
-    """Key frame: the plain pipeline (preprocess -> TAIT -> sort -> raster)."""
+def render_planned_frame(scene, cam: Camera, plan: TilePlan,
+                         cfg: RenderConfig, *,
+                         dpes_depth: Optional[jax.Array] = None
+                         ) -> Tuple[RenderOutput, TilePlan, "jax.Array",
+                                    PlanStats]:
+    """The ONE shared stage pipeline every frame renders through.
+
+    preprocess -> intersect against the plan's R slots -> (R, K) compacted
+    binning (with per-slot DPES depth limits) -> device-LDU schedule over
+    the slots -> raster the slots -> scatter back to the (H, W) frame.
+
+    dpes_depth: optional (T,) per-tile early-stop depth (inf = no prior);
+    gathered to the plan's slots before binning.
+
+    Returns ``(out, plan, n_gaussians, stats)`` where ``out`` is the
+    full-frame RenderOutput (unplanned tiles empty), ``plan`` now carries
+    the LDU schedule + per-slot workloads, and ``stats`` the remaining
+    per-slot counters the wrappers fold into a ``FrameRecord``.
+    """
     proj = preprocess(scene, cam, near=cfg.near)
     grid = intersect.make_tile_grid(cam)
+    slots = intersect.take_tiles(grid, plan.tile_ids)
+
     if cfg.intersect_method == "tait":
-        stage1 = intersect.tait_stage1_mask(proj, grid)
-        mask = intersect.tait_mask(proj, grid)
-        candidate_pairs = intersect.pair_count(stage1)
+        stage1 = intersect.tait_stage1_mask(proj, slots)
+        mask = intersect.tait_mask(proj, slots)
+        cand_src = stage1
     else:
-        mask = intersect.intersect(proj, grid, cfg.intersect_method)
-        candidate_pairs = intersect.pair_count(mask)
-    bins = binning.build_tile_bins(mask, proj.depth, cfg.capacity)
-    out = render_from_bins(proj, bins, grid, impl=cfg.impl, chunk=cfg.chunk)
+        mask = intersect.intersect(proj, slots, cfg.intersect_method)
+        cand_src = mask
+    candidate_pairs = jnp.sum(
+        (cand_src & plan.slot_active[None, :]).astype(jnp.int32))
+    mask = mask & plan.slot_active[None, :]
+    raw_slots = jnp.sum(mask.astype(jnp.int32), axis=0)
+
+    limit = None
+    if dpes_depth is not None:
+        limit = dpes_depth[plan.tile_ids] * cfg.dpes_margin
+    bins = binning.build_tile_bins(mask, proj.depth, cfg.capacity,
+                                   depth_limit=limit)
+    # Device LDU (paper Sec. V-B): post-DPES counts are the workload
+    # prediction; the greedy Morton fill + light-to-heavy order runs in
+    # jnp, inside whatever jit/scan wraps this frame.
+    plan = plan_mod.schedule_plan(plan, bins.count, cfg.ldu_blocks)
+
+    out = render_plan_slots(proj, bins, slots.origins, plan.tile_ids, grid,
+                            impl=cfg.impl, chunk=cfg.chunk)
+    stats = PlanStats(candidate_pairs=candidate_pairs, raw_slots=raw_slots,
+                      overflow_pairs=jnp.sum(bins.overflow))
+    n_gaussians = jnp.sum(proj.valid.astype(jnp.int32))
+    return out, plan, n_gaussians, stats
+
+
+def _plan_record(plan: TilePlan, stats: PlanStats, out: RenderOutput,
+                 n_gaussians: jax.Array, num_tiles: int, cfg: RenderConfig,
+                 *, is_full: bool, tiles_interpolated: jax.Array
+                 ) -> FrameRecord:
+    """Fold plan-slot counters into the (T,)-shaped FrameRecord."""
+    scat = functools.partial(plan_mod.scatter_slots, plan,
+                             num_tiles=num_tiles)
+    return FrameRecord(
+        is_full=jnp.bool_(is_full),
+        n_gaussians=n_gaussians,
+        candidate_pairs=stats.candidate_pairs,
+        raw_pairs=scat(stats.raw_slots),
+        sort_pairs=scat(plan.workload),
+        raster_pairs=out.processed_pairs,
+        active=scat(plan.slot_active, fill=False),
+        tiles_interpolated=tiles_interpolated,
+        overflow_pairs=stats.overflow_pairs,
+        overflow_tiles=plan.overflow_tiles,
+        block_of_tile=scat(plan.block_of, fill=-1),
+        order_in_block=scat(plan.order_in_block),
+        block_load=plan_mod.block_loads(plan, cfg.ldu_blocks))
+
+
+def render_full_frame(scene, cam: Camera, cfg: RenderConfig,
+                      frame_idx: Union[int, jax.Array] = 0
+                      ) -> Tuple[RenderOutput, FrameState, FrameRecord]:
+    """Key frame: ``render_planned_frame`` with an all-tiles plan (R = T).
+
+    ``frame_idx`` is the frame's true global index — mid-trajectory key
+    frames must not reset the carried counter (it threads through
+    ``FrameState`` for the engine's golden comparison).
+    """
+    tplan = plan_mod.full_plan(cam.tiles_x, cam.tiles_y)
+    out, tplan, n_gaussians, stats = render_planned_frame(
+        scene, cam, tplan, cfg)
 
     coverage = 1.0 - out.transmittance
     state = FrameState(
         rgb=out.rgb, exp_depth=out.exp_depth, trunc_depth=out.trunc_depth,
         source_mask=coverage > cfg.min_coverage,
-        frame_idx=jnp.int32(0))
-    t = grid.num_tiles
-    rec = FrameRecord(
-        is_full=jnp.bool_(True),
-        n_gaussians=jnp.sum(proj.valid.astype(jnp.int32)),
-        candidate_pairs=candidate_pairs,
-        raw_pairs=bins.count, sort_pairs=bins.count,
-        raster_pairs=out.processed_pairs,
-        active=jnp.ones((t,), bool),
-        tiles_interpolated=jnp.int32(0),
-        overflow_pairs=jnp.sum(bins.overflow),
-        overflow_tiles=jnp.int32(0))
+        frame_idx=jnp.asarray(frame_idx, jnp.int32))
+    rec = _plan_record(tplan, stats, out, n_gaussians, cam.num_tiles, cfg,
+                       is_full=True, tiles_interpolated=jnp.int32(0))
     return out, state, rec
-
-
-def _render_tile_subset(proj, bins: binning.TileBins, grid, rerender,
-                        rcap: int, cfg: RenderConfig) -> RenderOutput:
-    """Rasterize only the top-``rcap`` re-render tiles; others stay empty."""
-    t = grid.num_tiles
-    order = jnp.argsort(-rerender.astype(jnp.int32), stable=True)[:rcap]
-    sel = rerender[order]                                   # (rcap,)
-    sub = binning.TileBins(
-        indices=bins.indices[order],
-        valid=bins.valid[order] & sel[:, None],
-        count=jnp.where(sel, bins.count[order], 0),
-        overflow=bins.overflow[order], capacity=bins.capacity)
-    tg = binning.gather_tiles(proj, sub)
-    rgb_t, trans_t, d_t, td_t, proc = kops.raster_tiles(
-        tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
-        grid.origins[order], sub.count, impl=cfg.impl, chunk=cfg.chunk)
-    full = lambda shape, fill: jnp.full(shape, fill, jnp.float32)
-    rgb_all = jnp.zeros((t, TILE, TILE, 3)).at[order].set(rgb_t)
-    trans_all = full((t, TILE, TILE), 1.0).at[order].set(trans_t)
-    d_all = jnp.zeros((t, TILE, TILE)).at[order].set(d_t)
-    td_all = jnp.zeros((t, TILE, TILE)).at[order].set(td_t)
-    proc_all = jnp.zeros((t,), jnp.int32).at[order].set(proc)
-    return RenderOutput(
-        rgb=untile(rgb_all, grid.tiles_x, grid.tiles_y),
-        transmittance=untile(trans_all, grid.tiles_x, grid.tiles_y),
-        exp_depth=untile(d_all, grid.tiles_x, grid.tiles_y),
-        trunc_depth=untile(td_all, grid.tiles_x, grid.tiles_y),
-        processed_pairs=proc_all)
 
 
 def render_sparse_frame(scene, ref_cam: Camera, tgt_cam: Camera,
                         state: FrameState, cfg: RenderConfig
                         ) -> Tuple[jax.Array, FrameState, FrameRecord]:
-    """TWSR frame (Algo. 1): warp, decide per tile, re-render the rest."""
+    """TWSR frame (Algo. 1): warp, plan the re-render set, render the plan.
+
+    The warp's tile decisions become a compacted ``TilePlan`` with
+    ``R = rerender_capacity`` slots (or R = T when uncapped); re-render
+    tiles beyond R degrade to interpolation and are counted.
+    """
     w = warp_mod.viewpoint_transform(
         state.rgb, state.exp_depth, state.trunc_depth, state.source_mask,
         ref_cam, tgt_cam, n0_ratio=cfg.n0_ratio, near=cfg.near)
-    grid = intersect.make_tile_grid(tgt_cam)
-
-    rerender = w.rerender_tile
-    # Optional static cap on the re-render set (wall-clock path): tiles
-    # beyond capacity degrade to interpolation and are counted.
-    if cfg.rerender_capacity is not None and cfg.rerender_capacity < grid.num_tiles:
-        score = rerender.astype(jnp.int32)
-        order = jnp.argsort(-score, stable=True)[: cfg.rerender_capacity]
-        sel = jnp.zeros((grid.num_tiles,), bool).at[order].set(
-            rerender[order])
-        overflow_tiles = jnp.sum(rerender) - jnp.sum(sel)
-        rerender = sel
-    else:
-        overflow_tiles = jnp.int32(0)
-
-    proj = preprocess(scene, tgt_cam, near=cfg.near)
-    if cfg.intersect_method == "tait":
-        stage1 = intersect.tait_stage1_mask(proj, grid)
-        mask = intersect.tait_mask(proj, grid)
-        candidate_pairs = jnp.sum(
-            (stage1 & rerender[None, :]).astype(jnp.int32))
-    else:
-        mask = intersect.intersect(proj, grid, cfg.intersect_method)
-        candidate_pairs = jnp.sum(
-            (mask & rerender[None, :]).astype(jnp.int32))
-    mask_active = mask & rerender[None, :]
-    raw_pairs = jnp.sum(mask_active.astype(jnp.int32), axis=0)
+    tplan = plan_mod.sparse_plan(w.rerender_tile, tgt_cam.tiles_x,
+                                 tgt_cam.tiles_y, cfg.rerender_capacity)
 
     limit = jnp.where(jnp.isfinite(w.dpes_depth), w.dpes_depth, jnp.inf) \
         if cfg.use_dpes else None
-    bins = binning.build_tile_bins(
-        mask_active, proj.depth, cfg.capacity,
-        depth_limit=limit * cfg.dpes_margin if limit is not None else None)
-    if cfg.rerender_capacity is not None \
-            and cfg.rerender_capacity < grid.num_tiles:
-        # actually SKIP the non-re-rendered tiles: gather the selected
-        # tile bins, rasterize only those, scatter back — this is where
-        # TWSR's wall-clock win comes from on real hardware.
-        out = _render_tile_subset(proj, bins, grid, rerender,
-                                  cfg.rerender_capacity, cfg)
-    else:
-        out = render_from_bins(proj, bins, grid, impl=cfg.impl,
-                               chunk=cfg.chunk)
+    out, tplan, n_gaussians, stats = render_planned_frame(
+        scene, tgt_cam, tplan, cfg, dpes_depth=limit)
+    # Effective re-render set: plan slots that survived compaction.
+    rerender = plan_mod.scatter_slots(tplan, tplan.slot_active,
+                                      num_tiles=tgt_cam.num_tiles,
+                                      fill=False)
 
     # --- compose the final frame -----------------------------------------
     # Interpolated tiles: warped pixels + diffusion-inpainted holes; the
@@ -200,7 +232,7 @@ def render_sparse_frame(scene, ref_cam: Camera, tgt_cam: Camera,
     depth_warp = inpainted[..., 3]
     trunc_warp = inpainted[..., 4]
 
-    rr_px = _tile_flag_to_pixels(rerender, grid.tiles_x, grid.tiles_y)
+    rr_px = _tile_flag_to_pixels(rerender, tgt_cam.tiles_x, tgt_cam.tiles_y)
     rgb_final = jnp.where(rr_px[..., None], out.rgb, rgb_warp)
     exp_depth = jnp.where(rr_px, out.exp_depth, depth_warp)
     trunc_depth = jnp.where(rr_px, out.trunc_depth, trunc_warp)
@@ -216,16 +248,10 @@ def render_sparse_frame(scene, ref_cam: Camera, tgt_cam: Camera,
     new_state = FrameState(rgb=rgb_final, exp_depth=exp_depth,
                            trunc_depth=trunc_depth, source_mask=src,
                            frame_idx=state.frame_idx + 1)
-    rec = FrameRecord(
-        is_full=jnp.bool_(False),
-        n_gaussians=jnp.sum(proj.valid.astype(jnp.int32)),
-        candidate_pairs=candidate_pairs,
-        raw_pairs=raw_pairs, sort_pairs=bins.count,
-        raster_pairs=out.processed_pairs,
-        active=rerender,
-        tiles_interpolated=jnp.sum(w.interpolate_tile.astype(jnp.int32)),
-        overflow_pairs=jnp.sum(bins.overflow),
-        overflow_tiles=overflow_tiles)
+    rec = _plan_record(
+        tplan, stats, out, n_gaussians, tgt_cam.num_tiles, cfg,
+        is_full=False,
+        tiles_interpolated=jnp.sum(w.interpolate_tile.astype(jnp.int32)))
     return rgb_final, new_state, rec
 
 
@@ -313,7 +339,8 @@ def render_trajectory_py(scene, cam: Camera, poses: jax.Array,
     for f in range(poses.shape[0]):
         cam_f = cam.with_pose(poses[f])
         if f % cfg.window == 0 or state is None:
-            out, state, rec = full_fn(scene, cam_f)
+            out, state, rec = full_fn(scene, cam_f,
+                                      frame_idx=jnp.int32(f))
             frames.append(out.rgb)
         else:
             rgb, state, rec = sparse_fn(scene, ref_cam, cam_f, state)

@@ -1,5 +1,11 @@
 """Rasterization orchestrator: tiles in, full-frame images out.
 
+``render_plan_slots`` is the plan-driven production path: it rasterizes
+only a TilePlan's R compacted slots and scatters the tile images back
+into the full frame (untouched tiles read as empty: rgb 0, T = 1), so
+raster cost scales with R. ``render_from_bins`` keeps the dense (T,)
+layout for oracle comparisons and stage-isolation benchmarks.
+
 Also hosts the brute-force whole-image oracle used by integration tests:
 it blends *every* valid Gaussian into *every* pixel in global depth order —
 no tiling, no intersection test, no capacity — so any tiling/binning/raster
@@ -56,6 +62,36 @@ def render_from_bins(proj: ProjectedGaussians, bins: binning.TileBins,
         exp_depth=untile(d_t, grid.tiles_x, grid.tiles_y),
         trunc_depth=untile(td_t, grid.tiles_x, grid.tiles_y),
         processed_pairs=proc)
+
+
+def render_plan_slots(proj: ProjectedGaussians, bins: binning.TileBins,
+                      slot_origins: jax.Array, tile_ids: jax.Array,
+                      grid: TileGrid, *, impl: str = "jnp_chunked",
+                      chunk: int = 64) -> RenderOutput:
+    """Rasterize a TilePlan's R slots, scatter back to the (T,) frame.
+
+    ``bins`` is the (R, K) compacted binning; ``slot_origins``/``tile_ids``
+    come from the plan (``intersect.take_tiles`` / ``TilePlan.tile_ids``).
+    Tiles outside the plan never reach the rasterizer and read back as
+    empty (rgb/depth 0, transmittance 1, 0 processed pairs) — this is
+    where TWSR's wall-clock win comes from on real hardware.
+    """
+    tg = binning.gather_tiles(proj, bins)
+    rgb_s, trans_s, d_s, td_s, proc = kops.raster_tiles(
+        tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
+        slot_origins, bins.count, impl=impl, chunk=chunk)
+    t = grid.num_tiles
+    rgb_all = jnp.zeros((t, TILE, TILE, 3)).at[tile_ids].set(rgb_s)
+    trans_all = jnp.full((t, TILE, TILE), 1.0).at[tile_ids].set(trans_s)
+    d_all = jnp.zeros((t, TILE, TILE)).at[tile_ids].set(d_s)
+    td_all = jnp.zeros((t, TILE, TILE)).at[tile_ids].set(td_s)
+    proc_all = jnp.zeros((t,), jnp.int32).at[tile_ids].set(proc)
+    return RenderOutput(
+        rgb=untile(rgb_all, grid.tiles_x, grid.tiles_y),
+        transmittance=untile(trans_all, grid.tiles_x, grid.tiles_y),
+        exp_depth=untile(d_all, grid.tiles_x, grid.tiles_y),
+        trunc_depth=untile(td_all, grid.tiles_x, grid.tiles_y),
+        processed_pairs=proc_all)
 
 
 def render_oracle(proj: ProjectedGaussians, cam: Camera) -> RenderOutput:

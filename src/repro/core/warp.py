@@ -21,6 +21,11 @@ Everything is shape-static: tile decisions are boolean masks over the fixed
 tile grid, so the whole transform jits and shards — and, because no shape
 depends on a traced value, it is a valid ``lax.scan`` body and batches
 under ``vmap`` (the scanned engine in core/engine.py relies on both).
+
+The ``rerender_tile`` mask and ``dpes_depth`` priors produced here are the
+inputs to ``plan.sparse_plan``: downstream, the re-render set is compacted
+into a static-R ``TilePlan`` and rendered through the shared
+``pipeline.render_planned_frame`` stage pipeline (DESIGN.md §2).
 """
 from __future__ import annotations
 

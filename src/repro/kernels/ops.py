@@ -84,11 +84,15 @@ def _raster_tile_chunked_jnp(mean2d, conic, rgb, opacity, depth, origin,
 def raster_tiles(mean2d, conic, rgb, opacity, depth, origins, counts,
                  *, impl: str = "jnp_chunked", chunk: int = 64,
                  tile: int = TILE):
-    """Rasterize every tile: inputs (T, K, ...) -> 5 outputs.
+    """Rasterize a batch of tiles: inputs (R, K, ...) -> 5 outputs.
 
-    Returns (rgb, transmittance, expected_depth, truncated_depth,
-    processed_pairs) — the last is (T,) int32 pairs traversed before the
-    early-stop exit (chunk-granular for pallas/jnp_chunked, exact for ref).
+    The leading axis is whatever tile set the caller planned — all T
+    tiles on the dense path, or a TilePlan's R compacted slots (the
+    production path in core/pipeline.py, where raster cost scales with
+    the re-render slot count). Returns (rgb, transmittance,
+    expected_depth, truncated_depth, processed_pairs) — the last is (R,)
+    int32 pairs traversed before the early-stop exit (chunk-granular for
+    pallas/jnp_chunked, exact for ref).
     """
     if impl == "pallas":
         return raster_tiles_pallas(mean2d, conic, rgb, opacity, depth,

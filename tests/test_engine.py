@@ -14,7 +14,8 @@ N_FRAMES = 7
 
 _COUNT_FIELDS = ("n_gaussians", "candidate_pairs", "raw_pairs",
                  "sort_pairs", "raster_pairs", "tiles_interpolated",
-                 "overflow_pairs", "overflow_tiles")
+                 "overflow_pairs", "overflow_tiles",
+                 "block_of_tile", "order_in_block", "block_load")
 
 
 def _poses(n=N_FRAMES, dx=0.0):
@@ -77,6 +78,21 @@ def test_keep_states_stacked(small_scene, small_cam):
     # the carried state's rgb is the composed frame
     np.testing.assert_allclose(np.asarray(res.states.rgb[1]),
                                np.asarray(res.frames[1]), atol=1e-6)
+
+
+def test_frame_idx_survives_midtrajectory_keyframes(small_scene, small_cam):
+    """state.frame_idx is the TRUE global index: mid-trajectory key frames
+    (frames 3 and 6 at window=3) must not reset the counter — and the
+    scanned engine must agree with the legacy loop on it."""
+    cfg = RenderConfig(window=3)
+    res = render_trajectory(small_scene, small_cam, _poses(), cfg,
+                            keep_states=True)
+    np.testing.assert_array_equal(np.asarray(res.states.frame_idx),
+                                  np.arange(N_FRAMES))
+    ref = render_trajectory_py(small_scene, small_cam, _poses(), cfg,
+                               keep_states=True)
+    np.testing.assert_array_equal(np.asarray(res.states.frame_idx),
+                                  np.asarray(ref.states.frame_idx))
 
 
 def test_streams_match_solo(small_scene, small_cam):

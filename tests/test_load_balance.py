@@ -1,11 +1,18 @@
-"""LDU scheduling invariants (paper Sec. V-B) + hypothesis properties."""
+"""LDU scheduling invariants (paper Sec. V-B) + hypothesis properties,
+plus parity of the device-side (jnp) LDU port against the numpy golden
+reference across all four policies."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.load_balance import Schedule, load_stats, morton_order, schedule
+from repro.core.load_balance import (Schedule, ldu_schedule, load_stats,
+                                     morton_order, morton_rank, schedule)
 from repro.core.streaming import (AcceleratorConfig, FrameWork,
                                   simulate_sequence, throughput)
+
+POLICIES = ("static_blocked", "round_robin", "dynamic", "ls_gaussian")
 
 
 def test_morton_is_permutation():
@@ -77,6 +84,53 @@ def test_inactive_tiles_skipped():
     s = schedule(w, 4, policy="ls_gaussian", tiles_x=8, tiles_y=8,
                  active=active)
     assert set(np.where(s.block_of_tile >= 0)[0]) == {3, 17, 42}
+
+
+def test_morton_rank_inverts_morton_order():
+    """Device morton_rank is the inverse permutation of numpy morton_order."""
+    for tx, ty in [(4, 4), (8, 8), (8, 6), (16, 16)]:
+        order = morton_order(tx, ty)
+        rank = np.asarray(morton_rank(tx, ty))
+        np.testing.assert_array_equal(np.argsort(rank, kind="stable"), order)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_device_schedule_matches_numpy(policy):
+    """The jitted jnp LDU port produces bit-identical block assignments
+    and intra-block orders to numpy ``schedule`` — random workloads,
+    random active subsets, varying grid shapes and block counts."""
+    for seed in range(12):
+        rng = np.random.default_rng(seed)
+        tx = int(rng.choice([4, 8, 16]))
+        ty = int(rng.choice([4, 6, 8]))
+        t = tx * ty
+        w = rng.integers(0, 5000, size=t)
+        active = rng.random(t) < rng.choice([0.0, 0.4, 1.0])
+        b = int(rng.integers(2, 33))
+        ref = schedule(w, b, policy=policy, tiles_x=tx, tiles_y=ty,
+                       active=active)
+        dev_fn = jax.jit(lambda wl, a: ldu_schedule(
+            wl, b, policy=policy, tiles_x=tx, tiles_y=ty, active=a))
+        blk, order = dev_fn(jnp.asarray(w), jnp.asarray(active))
+        err = f"{policy} seed={seed} ({tx}x{ty}, b={b})"
+        np.testing.assert_array_equal(np.asarray(blk), ref.block_of_tile,
+                                      err_msg=err)
+        np.testing.assert_array_equal(np.asarray(order), ref.order_in_block,
+                                      err_msg=err)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 5000), min_size=16, max_size=64),
+       st.integers(2, 16))
+def test_device_schedule_parity_property(workloads, b):
+    """Property form of the parity check on the paper's policy."""
+    w = np.zeros(64, np.int64)
+    w[:len(workloads)] = workloads
+    ref = schedule(w, b, policy="ls_gaussian", tiles_x=8, tiles_y=8)
+    blk, order = ldu_schedule(jnp.asarray(w), b, policy="ls_gaussian",
+                              tiles_x=8, tiles_y=8)
+    np.testing.assert_array_equal(np.asarray(blk), ref.block_of_tile)
+    np.testing.assert_array_equal(np.asarray(order), ref.order_in_block)
 
 
 def _imbalanced_frame(rng, t=256, heavy_frac=0.08):

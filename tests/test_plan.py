@@ -1,0 +1,200 @@
+"""TilePlan-driven rendering (DESIGN.md §2): the compacted sparse path is
+equivalent to the dense path, compiles to (R, K)-shaped stages, and the
+device-LDU schedule recorded inside the jitted scan matches the numpy
+golden ``load_balance.schedule``."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binning, intersect, plan as plan_mod, projection, raster
+from repro.core.load_balance import schedule
+from repro.core.pipeline import (RenderConfig, render_full_frame,
+                                 render_sparse_frame, render_trajectory)
+from repro.core.streaming import (AcceleratorConfig, frameworks_from_stacked,
+                                  simulate_sequence)
+from repro.scenes.trajectory import dolly_trajectory
+
+_PER_TILE_FIELDS = ("raw_pairs", "sort_pairs", "raster_pairs", "active",
+                    "block_of_tile", "order_in_block")
+
+
+def _poses(n=4):
+    return dolly_trajectory(n, start=(0.0, -0.3, -2.0),
+                            target=(0.0, 0.0, 6.0))
+
+
+def _sparse_inputs(scene, cam, cfg):
+    poses = _poses(2)
+    full = jax.jit(render_full_frame, static_argnames="cfg")
+    _, state, _ = full(scene, cam.with_pose(poses[0]), cfg=cfg)
+    return cam.with_pose(poses[0]), cam.with_pose(poses[1]), state
+
+
+def test_plan_basic_structure(small_cam):
+    tx, ty = small_cam.tiles_x, small_cam.tiles_y
+    t = tx * ty
+    p = plan_mod.full_plan(tx, ty)
+    assert p.num_slots == t
+    assert sorted(np.asarray(p.tile_ids).tolist()) == list(range(t))
+    assert bool(np.asarray(p.slot_active).all())
+
+    rerender = jnp.zeros((t,), bool).at[jnp.array([1, 5, 9])].set(True)
+    sp = plan_mod.sparse_plan(rerender, tx, ty, 2)
+    assert sp.num_slots == 2
+    assert int(np.asarray(sp.slot_active).sum()) == 2
+    assert int(sp.overflow_tiles) == 1
+    # selected slots really are re-render tiles
+    assert all(bool(rerender[i]) for i in np.asarray(sp.tile_ids).tolist())
+
+
+def test_compacted_sparse_matches_dense(small_scene, small_cam):
+    """Plan equivalence: with enough slots for every re-render tile, the
+    (R, K) compacted path reproduces the dense (T, K) path — frames to
+    1e-5, FrameRecord pair counts exactly."""
+    dense_cfg = RenderConfig(window=10, rerender_capacity=None)
+    ref_cam, tgt_cam, state = _sparse_inputs(small_scene, small_cam,
+                                             dense_cfg)
+    sparse = jax.jit(render_sparse_frame, static_argnames="cfg")
+    rgb_d, _, rec_d = sparse(small_scene, ref_cam, tgt_cam, state,
+                             cfg=dense_cfg)
+    n_rr = int(np.asarray(rec_d.active).sum())
+    assert 0 < n_rr < small_cam.num_tiles, "test needs a partial re-render"
+
+    cap_cfg = RenderConfig(window=10, rerender_capacity=n_rr)
+    rgb_c, _, rec_c = sparse(small_scene, ref_cam, tgt_cam, state,
+                             cfg=cap_cfg)
+    assert int(rec_c.overflow_tiles) == 0
+    np.testing.assert_allclose(np.asarray(rgb_c), np.asarray(rgb_d),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(rec_c.candidate_pairs),
+                                  np.asarray(rec_d.candidate_pairs))
+    np.testing.assert_array_equal(np.asarray(rec_c.overflow_pairs),
+                                  np.asarray(rec_d.overflow_pairs))
+    for name in _PER_TILE_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(rec_c, name)),
+                                      np.asarray(getattr(rec_d, name)),
+                                      err_msg=name)
+
+
+def test_full_frame_matches_dense_reference(small_scene, small_cam):
+    """The all-tiles plan (Morton-permuted slots + scatter back) is a pure
+    reordering: it must equal the dense render_from_bins reference."""
+    cfg = RenderConfig()
+    out, _, rec = jax.jit(render_full_frame, static_argnames="cfg")(
+        small_scene, small_cam, cfg=cfg)
+    proj = projection.preprocess(small_scene, small_cam, near=cfg.near)
+    grid = intersect.make_tile_grid(small_cam)
+    mask = intersect.tait_mask(proj, grid)
+    bins = binning.build_tile_bins(mask, proj.depth, cfg.capacity)
+    ref = raster.render_from_bins(proj, bins, grid)
+    np.testing.assert_allclose(np.asarray(out.rgb), np.asarray(ref.rgb),
+                               atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out.processed_pairs),
+                                  np.asarray(ref.processed_pairs))
+    np.testing.assert_array_equal(np.asarray(rec.sort_pairs),
+                                  np.asarray(bins.count))
+
+
+def _collect_shapes(jaxpr, acc):
+    """All output-var shapes in a jaxpr, recursing into sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                acc.add(tuple(aval.shape))
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (tuple, list)) else (p,)):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    _collect_shapes(inner, acc)
+
+
+def test_sparse_stages_are_plan_shaped(small_scene, small_cam):
+    """The compacted sparse frame compiles with (N, R)/(R, K) intersect
+    and binning intermediates and NO dense (N, T)/(T, K) ones — the
+    wrappers really collapse onto the shared plan pipeline."""
+    rcap, kcap = 4, 128
+    cfg = RenderConfig(window=10, rerender_capacity=rcap, capacity=kcap)
+    ref_cam, tgt_cam, state = _sparse_inputs(small_scene, small_cam, cfg)
+    n = small_scene.means.shape[0]
+    t = small_cam.num_tiles
+    assert rcap < t
+
+    jx = jax.make_jaxpr(
+        functools.partial(render_sparse_frame, cfg=cfg))(
+        small_scene, ref_cam, tgt_cam, state)
+    shapes = set()
+    _collect_shapes(jx.jaxpr, shapes)
+    assert (n, rcap) in shapes, "compacted (N, R) intersect mask missing"
+    assert (rcap, kcap) in shapes, "compacted (R, K) bins missing"
+    assert (n, t) not in shapes, "dense (N, T) intersect mask still built"
+    assert (t, kcap) not in shapes, "dense (T, K) bins still built"
+
+    # ...while the full frame plans all T tiles (R = T).
+    jx_full = jax.make_jaxpr(
+        functools.partial(render_full_frame, cfg=cfg))(small_scene, tgt_cam)
+    full_shapes = set()
+    _collect_shapes(jx_full.jaxpr, full_shapes)
+    assert (n, t) in full_shapes
+    assert (t, kcap) in full_shapes
+
+
+def test_recorded_schedule_matches_numpy_golden(small_scene, small_cam):
+    """The device LDU runs inside the jitted scan (no host callback) and
+    its recorded block assignments match numpy ``schedule()`` on the
+    identical workloads/active sets, frame by frame."""
+    cfg = RenderConfig(window=2, ldu_blocks=8)
+    res = render_trajectory(small_scene, small_cam, _poses(4), cfg)
+    for f in range(4):
+        rec = res.records[f]
+        wl = np.asarray(rec.sort_pairs)
+        active = np.asarray(rec.active)
+        ref = schedule(wl, cfg.ldu_blocks, policy="ls_gaussian",
+                       tiles_x=small_cam.tiles_x, tiles_y=small_cam.tiles_y,
+                       active=active)
+        np.testing.assert_array_equal(np.asarray(rec.block_of_tile),
+                                      ref.block_of_tile, err_msg=f"frame {f}")
+        np.testing.assert_array_equal(np.asarray(rec.order_in_block),
+                                      ref.order_in_block, err_msg=f"frame {f}")
+        # per-block load summary is consistent with the assignment
+        loads = np.asarray(rec.block_load)
+        assert loads.shape == (cfg.ldu_blocks,)
+        for b in range(cfg.ldu_blocks):
+            assert loads[b] == wl[ref.block_of_tile == b].sum()
+
+
+def test_simulator_consumes_recorded_schedule(small_scene, small_cam):
+    """policy='recorded' serves the FrameRecord's device schedule and
+    reproduces the host-side ls_gaussian simulation exactly."""
+    cfg = RenderConfig(window=2, ldu_blocks=8)
+    res = render_trajectory(small_scene, small_cam, _poses(4), cfg)
+    frames = frameworks_from_stacked(
+        res.records, small_cam.tiles_x, small_cam.tiles_y,
+        small_cam.width * small_cam.height)
+    assert frames[0].num_blocks == cfg.ldu_blocks
+    acfg = AcceleratorConfig(num_blocks=cfg.ldu_blocks)
+    rec_t = simulate_sequence(frames, acfg, policy="recorded")
+    ls_t = simulate_sequence(frames, acfg, policy="ls_gaussian",
+                             workload_source="dpes", light_to_heavy=True)
+    for a, b in zip(rec_t, ls_t):
+        assert a.frame_end == pytest.approx(b.frame_end)
+        assert a.sort_stall == pytest.approx(b.sort_stall)
+        assert a.utilization == pytest.approx(b.utilization)
+
+    bad = AcceleratorConfig(num_blocks=cfg.ldu_blocks * 2)
+    with pytest.raises(ValueError, match="recorded schedule"):
+        simulate_sequence(frames, bad, policy="recorded")
+
+
+def test_scatter_slots_masks_inactive(small_cam):
+    tx, ty = small_cam.tiles_x, small_cam.tiles_y
+    t = tx * ty
+    rerender = jnp.zeros((t,), bool).at[jnp.array([2, 7])].set(True)
+    sp = plan_mod.sparse_plan(rerender, tx, ty, 4)  # 2 padded slots
+    vals = jnp.full((4,), 9, jnp.int32)
+    out = np.asarray(plan_mod.scatter_slots(sp, vals, t, fill=-3))
+    assert (out[np.asarray(rerender)] == 9).all()
+    assert (out[~np.asarray(rerender)] == -3).all()
