@@ -1,7 +1,9 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints CSV (``key=value`` columns joined by commas) and writes
-experiments/artifacts/bench_results.json. ``--only <name>`` selects one.
+experiments/artifacts/bench_results.json. ``--only <name>`` selects one;
+a selective run MERGES into the artifact (rows of re-run benches are
+replaced, every other bench's committed rows survive).
 """
 from __future__ import annotations
 
@@ -11,7 +13,7 @@ import os
 import time
 
 BENCHES = ("intersection", "warp_quality", "window_sweep", "ablation",
-           "accelerator", "wallclock")
+           "accelerator", "wallclock", "serve_bench")
 
 
 def main() -> None:
@@ -34,6 +36,11 @@ def main() -> None:
     out = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "artifacts", "bench_results.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)
+    if os.path.exists(out):
+        with open(out) as f:
+            prev = json.load(f)
+        fresh = {r["bench"] for r in all_rows}
+        all_rows = [r for r in prev if r["bench"] not in fresh] + all_rows
     with open(out, "w") as f:
         json.dump(all_rows, f, indent=1)
 

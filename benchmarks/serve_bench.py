@@ -1,0 +1,113 @@
+"""Serve-loop benchmark: continuous batching under Poisson stream churn.
+
+Drives ``repro.serve.StreamServer`` with synthetic traffic — Poisson
+arrivals of heterogeneous dolly/orbit trajectories over one shared scene
+— and reports the serving metrics the subsystem exists for: per-frame
+latency (p50/p99, enqueue -> render-complete, wall clock), rendered
+frames/sec, slot utilization of the fixed B-slot batch, and the bucketed
+executable cache's compile/hit log (the whole run must stay within one
+compilation per R bucket — that is the recompilation bound the
+bucketing buys).
+
+Writes ``experiments/artifacts/serve_bench.json`` (full report +
+per-round trace) and returns summary rows for ``benchmarks/run.py``.
+``--smoke`` is the CI tier-1 configuration: tiny scene, 4 streams over
+4 slots, 2 R buckets.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+from benchmarks.common import camera, scenes
+from repro.core.pipeline import RenderConfig
+from repro.serve import (PoissonTraffic, ServeConfig, StreamServer,
+                         TrafficConfig)
+
+_ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "artifacts")
+ARTIFACT = os.path.join(_ARTIFACTS, "serve_bench.json")
+# The CI smoke run writes its own file so a local `--smoke` never
+# clobbers the committed full-run artifact.
+SMOKE_ARTIFACT = os.path.join(_ARTIFACTS, "serve_bench_smoke.json")
+
+FULL = dict(
+    image=64, n_gaussians=3000, window=4, warmup=True,
+    scfg=ServeConfig(slots=8, chunk=3, r_buckets=(4, 8, 16), quantile=0.9,
+                     adapt_every=2),
+    traffic=TrafficConfig(n_streams=12, rate=6.0, min_frames=10,
+                          max_frames=16, seed=0),
+)
+SMOKE = dict(
+    image=48, n_gaussians=3000, window=4,
+    scfg=ServeConfig(slots=4, chunk=2, r_buckets=(4, 8), quantile=0.9,
+                     adapt_every=2),
+    scene="indoor",
+    traffic=TrafficConfig(n_streams=4, rate=8.0, min_frames=6,
+                          max_frames=8, seed=0),
+)
+
+
+def _serve(setup: dict) -> dict:
+    cam = camera(setup["image"], setup["image"])
+    scene = scenes(setup["n_gaussians"])[setup.get("scene", "outdoor")]
+    cfg = RenderConfig(window=setup["window"], capacity=256)
+    server = StreamServer(scene, cam, cfg, setup["scfg"])
+    if setup.get("warmup"):
+        # Compile all bucket executables up front so reported latencies
+        # measure serving, not jit cold-start (the smoke config skips
+        # this and eats the compiles in-round to stay short).
+        server.warmup()
+    return server.run(PoissonTraffic(setup["traffic"]), max_rounds=200)
+
+
+def run(smoke: bool = False) -> List[dict]:
+    setup = SMOKE if smoke else FULL
+    report = _serve(setup)
+    out = SMOKE_ARTIFACT if smoke else ARTIFACT
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+
+    n_exec = report["cache"]["distinct_executables"]
+    want = min(setup["scfg"].slots, setup["traffic"].n_streams)
+    assert report["max_concurrent"] >= want, \
+        f"expected {want} concurrent streams at peak, saw " \
+        f"{report['max_concurrent']}"
+    assert n_exec <= len(setup["scfg"].r_buckets), report["cache"]
+    assert report["streams_finished"] == setup["traffic"].n_streams
+
+    return [{
+        "bench": "serve", "mode": "smoke" if smoke else "full",
+        "streams_served": report["streams_served"],
+        "max_concurrent": report["max_concurrent"],
+        "frames": report["frames"],
+        "latency_p50_ms": report["latency_p50_ms"],
+        "latency_p99_ms": report["latency_p99_ms"],
+        "frames_per_second": report["frames_per_second"],
+        "slot_utilization": report["slot_utilization"],
+        "distinct_executables": n_exec,
+        "cache_hits": report["cache"]["hits"],
+        "warmup_seconds": report["warmup_seconds"],
+        "capacity_history": "->".join(map(str,
+                                          report["capacity_history"])),
+        "num_devices": report["num_devices"],
+    }]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI configuration: tiny scene, 4 streams, "
+                         "2 buckets")
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+    out = SMOKE_ARTIFACT if args.smoke else ARTIFACT
+    print(f"# artifact: {os.path.normpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

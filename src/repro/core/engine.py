@@ -48,6 +48,16 @@ wraps that stacked ``FrameRecord`` pytree: benchmarks consume the
 ``(F, ...)``/``(B, F, ...)`` arrays vectorized (one host transfer per
 trajectory instead of one per frame), while ``records[i]`` still
 recovers a per-frame ``FrameRecord`` view for spot checks.
+
+Serving extensions (consumed by ``repro.serve``, DESIGN.md §8): streams
+are *resumable* and *ragged*. ``render_streams`` takes per-stream
+active-frame ``counts`` (frames past a stream's count are padding: zero
+frames, blanked records, and — crucially — a frozen carry whose global
+step does not advance, so the key-frame schedule is preserved across
+stalls) plus initial ``carries`` (``init_carry``/``init_stream_carries``
+for fresh streams), and returns the final carries — a continuous batcher
+threads sessions through successive fixed-shape chunks with active
+frames bit-identical to a solo run.
 """
 from __future__ import annotations
 
@@ -75,6 +85,9 @@ class StreamsResult(NamedTuple):
     frames: jax.Array           # (B, F, H, W, 3)
     records: StackedRecords     # fields (B, F, ...)
     phases: jax.Array           # (B,) int32 key-frame phase offsets
+    counts: jax.Array           # (B,) int32 active-frame counts
+    frame_active: jax.Array     # (B, F) bool — frame within its count
+    carries: EngineCarry        # final per-stream carries, fields (B, ...)
 
 
 def _zero_state(cam: Camera) -> FrameState:
@@ -86,6 +99,43 @@ def _zero_state(cam: Camera) -> FrameState:
         trunc_depth=jnp.zeros((h, w), jnp.float32),
         source_mask=jnp.zeros((h, w), bool),
         frame_idx=jnp.int32(0))
+
+
+def init_carry(cam: Camera, pose: jax.Array) -> EngineCarry:
+    """Fresh stream carry: zero state at global step 0 (first frame full).
+
+    ``pose`` seeds ``prev_pose``; frame 0 is always a full render, so the
+    warp never reads it — any valid (4, 4) world-to-camera works.
+    """
+    return EngineCarry(state=_zero_state(cam),
+                       prev_pose=jnp.asarray(pose, jnp.float32),
+                       step=jnp.int32(0))
+
+
+def init_stream_carries(cam: Camera, poses_batch: jax.Array) -> EngineCarry:
+    """Batched fresh carries, fields (B, ...), one per stream slot."""
+    return jax.vmap(lambda p: init_carry(cam, p))(poses_batch[:, 0])
+
+
+def _mask_record(rec: FrameRecord, keep: jax.Array) -> FrameRecord:
+    """Blank an inactive (padding) frame's record: zero counts, no active
+    tiles, unscheduled LDU blocks — so masked frames read as no work."""
+    def m(v, blank):
+        return jnp.where(keep, v, jnp.asarray(blank, v.dtype))
+    return FrameRecord(
+        is_full=m(rec.is_full, False),
+        n_gaussians=m(rec.n_gaussians, 0),
+        candidate_pairs=m(rec.candidate_pairs, 0),
+        raw_pairs=m(rec.raw_pairs, 0),
+        sort_pairs=m(rec.sort_pairs, 0),
+        raster_pairs=m(rec.raster_pairs, 0),
+        active=m(rec.active, False),
+        tiles_interpolated=m(rec.tiles_interpolated, 0),
+        overflow_pairs=m(rec.overflow_pairs, 0),
+        overflow_tiles=m(rec.overflow_tiles, 0),
+        block_of_tile=m(rec.block_of_tile, -1),
+        order_in_block=m(rec.order_in_block, 0),
+        block_load=m(rec.block_load, 0))
 
 
 def make_frame_step(scene, cam: Camera, cfg: RenderConfig,
@@ -145,11 +195,45 @@ def _scan_trajectory(scene, cam, poses, phase, cfg, keep_states):
     return _scan_core(scene, cam, poses, phase, cfg, keep_states)
 
 
+def stream_scan(scene, cam: Camera, poses: jax.Array, count: jax.Array,
+                phase: jax.Array, cfg: RenderConfig, carry: EngineCarry):
+    """Masked, resumable single-stream scan — the serving-layer primitive.
+
+    Renders frames ``0 .. count-1`` of ``poses`` starting from ``carry``
+    (use :func:`init_carry` for a fresh stream). Frames at or beyond
+    ``count`` are padding: the carry passes through untouched (the global
+    step does NOT advance, so the key-frame schedule is preserved across
+    stalls), the frame reads as zeros, and the record is blanked via
+    ``_mask_record``. Because padded frames always trail the active prefix
+    within a chunk, active frames are bit-identical to an unmasked run —
+    the serving batcher (repro.serve) relies on this to resume sessions
+    chunk by chunk.
+
+    Not jitted here: ``render_streams`` wraps the vmapped version in one
+    jit, and ``serve.placement`` shard_maps it across devices.
+
+    Returns ``(carry_end, (frames, records, frame_active))``.
+    """
+    step_fn = make_frame_step(scene, cam, cfg, phase)
+
+    def body(carry, xs):
+        pose, i = xs
+        new_carry, (rgb, rec) = step_fn(carry, pose)
+        keep = i < count
+        carry_out = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(keep, n, o), new_carry, carry)
+        return carry_out, (jnp.where(keep, rgb, 0.0),
+                           _mask_record(rec, keep), keep)
+
+    idx = jnp.arange(poses.shape[0], dtype=jnp.int32)
+    return jax.lax.scan(body, carry, (poses, idx))
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _scan_streams(scene, cam, poses_batch, phases, cfg):
-    fn = lambda poses, phase: _scan_core(scene, cam, poses, phase, cfg,
-                                         False)
-    return jax.vmap(fn)(poses_batch, phases)
+def _scan_streams(scene, cam, poses_batch, counts, phases, carries, cfg):
+    fn = lambda poses, count, phase, carry: stream_scan(
+        scene, cam, poses, count, phase, cfg, carry)
+    return jax.vmap(fn)(poses_batch, counts, phases, carries)
 
 
 def render_trajectory(scene, cam: Camera, poses: jax.Array,
@@ -184,7 +268,9 @@ def stream_phases(num_streams: int, window: int) -> jax.Array:
 
 def render_streams(scene, cam: Camera, poses_batch: jax.Array,
                    cfg: RenderConfig, *,
-                   phases: Optional[Union[Sequence[int], jax.Array]] = None
+                   phases: Optional[Union[Sequence[int], jax.Array]] = None,
+                   counts: Optional[Union[Sequence[int], jax.Array]] = None,
+                   carries: Optional[EngineCarry] = None
                    ) -> StreamsResult:
     """Batched multi-stream rendering: vmap the scanned engine over B
     concurrent camera sessions sharing one scene.
@@ -196,11 +282,27 @@ def render_streams(scene, cam: Camera, poses_batch: jax.Array,
     spiking every ``window`` frames (see the module docstring for the
     vmap/select caveat: this vmapped executable itself computes both
     branches per stream regardless of phase).
+
+    ``counts`` (default: all F) gives each stream its own active-frame
+    count — trajectories of ragged length ride one fixed-(B, F) batch,
+    with frames at or beyond a stream's count masked out (zero frames,
+    blanked records, frozen carry). ``carries`` (default: fresh
+    :func:`init_carry` per stream) resumes each stream mid-trajectory;
+    the final per-stream carries come back in ``StreamsResult.carries``,
+    so chunked serving loops (repro.serve.batcher) can thread sessions
+    through successive fixed-shape batches.
     """
-    b = poses_batch.shape[0]
+    b, f = poses_batch.shape[0], poses_batch.shape[1]
     if phases is None:
         phases = stream_phases(b, cfg.window)
     phases = jnp.asarray(phases, jnp.int32)
-    frames, recs = _scan_streams(scene, cam, poses_batch, phases, cfg)
+    if counts is None:
+        counts = jnp.full((b,), f, jnp.int32)
+    counts = jnp.asarray(counts, jnp.int32)
+    if carries is None:
+        carries = init_stream_carries(cam, poses_batch)
+    carry_end, (frames, recs, active) = _scan_streams(
+        scene, cam, poses_batch, counts, phases, carries, cfg)
     return StreamsResult(frames=frames, records=StackedRecords(recs),
-                        phases=phases)
+                         phases=phases, counts=counts, frame_active=active,
+                         carries=carry_end)

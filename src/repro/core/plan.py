@@ -121,6 +121,21 @@ def scatter_slots(plan: TilePlan, values: jax.Array, num_tiles: int,
     return jnp.full(shape, fill, values.dtype).at[plan.tile_ids].set(masked)
 
 
+def rerender_demand(active, overflow_tiles):
+    """Per-frame re-render *demand*: tiles that wanted re-rendering.
+
+    The exact inverse of ``sparse_plan``'s compaction: ``active`` (the
+    ``FrameRecord.active`` flags, last axis T) counts the tiles that won a
+    plan slot and ``overflow_tiles`` the Morton tail that was dropped to
+    interpolation — their sum is the slot count an uncapped plan would
+    have used. Works on stacked ``(F, ..., T)`` record arrays (jnp or
+    numpy); the serving layer's ``serve.cache.suggest_capacity`` feeds
+    quantiles of this into the bucketed-R executable choice.
+    """
+    return jnp.sum(jnp.asarray(active).astype(jnp.int32), axis=-1) \
+        + jnp.asarray(overflow_tiles)
+
+
 def block_loads(plan: TilePlan, num_blocks: int) -> jax.Array:
     """(B,) predicted pairs per LDU block — the FrameRecord load summary."""
     idx = jnp.where(plan.block_of >= 0, plan.block_of, num_blocks)

@@ -1,0 +1,27 @@
+"""Streaming serving subsystem (DESIGN.md §8).
+
+Turns the batch engine (core/engine.py) into a server for churning
+streams: sessions attach/detach with phase-staggered key-frame schedules
+(``session``), a continuous batcher packs active sessions into fixed
+B-slot batches over ``engine.render_streams`` (``batcher``), a bucketed
+executable cache bounds recompilation while a workload-predictive policy
+picks ``rerender_capacity`` (``cache``), stream slots shard across
+devices (``placement``), and ``server`` ties it into the serve loop with
+latency / throughput / utilization metrics.
+"""
+from repro.serve.batcher import ContinuousBatcher, SlotBatch
+from repro.serve.cache import (ExecutableCache, pick_capacity,
+                               snap_capacity, suggest_capacity,
+                               validate_buckets)
+from repro.serve.placement import build_render_fn, stream_mesh
+from repro.serve.server import (PoissonTraffic, ServeConfig, StreamServer,
+                                TrafficConfig)
+from repro.serve.session import SessionManager, StreamSession
+
+__all__ = [
+    "ContinuousBatcher", "ExecutableCache", "PoissonTraffic",
+    "ServeConfig", "SessionManager", "SlotBatch", "StreamServer",
+    "StreamSession", "TrafficConfig", "build_render_fn", "pick_capacity",
+    "snap_capacity", "stream_mesh", "suggest_capacity",
+    "validate_buckets",
+]

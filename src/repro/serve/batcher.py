@@ -1,0 +1,167 @@
+"""Continuous batching: churning sessions -> fixed (B, F) engine batches.
+
+The engine compiles one executable per (B, F, cfg) shape, so the batcher
+never changes shape as streams come and go. It keeps B slots; each round
+it binds waiting sessions to free slots, pops up to ``chunk`` pending
+poses per bound session into a dense (B, chunk, 4, 4) batch, and masks
+everything else: a slot with fewer pending poses gets a shorter
+``count`` (the engine freezes its carry past the count — the key-frame
+schedule resumes exactly where it paused), and an unbound slot rides
+along with ``count=0`` and a throwaway fresh carry. The engine's masking
+guarantees padded slots/frames contribute nothing and active streams
+render bit-identically to a solo ``render_trajectory`` — pinned by
+tests/test_serve.py.
+
+``build`` pops poses (and their enqueue stamps) out of the sessions;
+``commit`` writes back the final carries, stamps per-frame latencies,
+and releases slots of drained-and-closed sessions (detaching them from
+the manager).
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.camera import Camera
+from repro.core.engine import EngineCarry, StreamsResult
+from repro.serve.session import SessionManager
+
+_EYE = np.eye(4, dtype=np.float32)
+
+
+class SlotBatch(NamedTuple):
+    """One round's dense engine input plus the host-side bookkeeping."""
+
+    poses: jax.Array        # (B, F, 4, 4)
+    counts: jax.Array       # (B,) int32 active-frame counts
+    phases: jax.Array       # (B,) int32 per-slot key-frame phases
+    carries: EngineCarry    # stacked (B, ...) resume carries
+    sids: Tuple[Optional[int], ...]          # slot -> session id (or None)
+    enq_times: Tuple[Tuple[float, ...], ...]  # per-slot popped stamps
+
+    @property
+    def active_frames(self) -> int:
+        return int(np.asarray(self.counts).sum())
+
+
+class ContinuousBatcher:
+    """Fixed B-slot batcher over ``engine.render_streams`` (see module)."""
+
+    def __init__(self, slots: int, chunk: int, cam: Camera):
+        if slots < 1 or chunk < 1:
+            raise ValueError(f"need slots >= 1 and chunk >= 1, got "
+                             f"{slots}, {chunk}")
+        self.slots = int(slots)
+        self.chunk = int(chunk)
+        self.cam = cam
+        self._slot_sid: List[Optional[int]] = [None] * self.slots
+        # Idle slots are all identical (count 0, eye pose, zero state) —
+        # one shared template instead of fresh device zeros every round.
+        self._idle_carry = engine.init_carry(cam, _EYE)
+
+    @property
+    def bound(self) -> int:
+        return sum(s is not None for s in self._slot_sid)
+
+    def admit(self, manager: SessionManager) -> int:
+        """Bind waiting sessions (oldest first) to free slots."""
+        admitted = 0
+        waiting = manager.waiting()
+        for i in range(self.slots):
+            if self._slot_sid[i] is not None or not waiting:
+                continue
+            sess = waiting.pop(0)
+            sess.slot = i
+            self._slot_sid[i] = sess.sid
+            admitted += 1
+        return admitted
+
+    def empty_batch(self) -> SlotBatch:
+        """An all-idle (count-0) batch that touches no session state —
+        shape-identical to a real round, so it drives executable warmup
+        without popping poses from bound sessions."""
+        b, f = self.slots, self.chunk
+        carries = [self._idle_carry] * b
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+        return SlotBatch(poses=jnp.asarray(np.tile(_EYE, (b, f, 1, 1))),
+                         counts=jnp.zeros((b,), jnp.int32),
+                         phases=jnp.zeros((b,), jnp.int32), carries=stacked,
+                         sids=(None,) * b, enq_times=((),) * b)
+
+    def build(self, manager: SessionManager) -> SlotBatch:
+        """Pop up to ``chunk`` poses per bound session into a dense batch."""
+        b, f = self.slots, self.chunk
+        poses = np.tile(_EYE, (b, f, 1, 1))
+        counts = np.zeros((b,), np.int32)
+        phases = np.zeros((b,), np.int32)
+        carries: List[EngineCarry] = []
+        sids: List[Optional[int]] = []
+        stamps: List[Tuple[float, ...]] = []
+        for i, sid in enumerate(self._slot_sid):
+            sess = manager.sessions.get(sid) if sid is not None else None
+            if sid is not None and sess is None:
+                # Detached externally since the last round: free the slot
+                # now (commit only handles cancellation mid-flight).
+                self._slot_sid[i] = sid = None
+            slot_stamps: List[float] = []
+            if sess is not None:
+                phases[i] = sess.phase
+                k = 0
+                while sess.pending and k < f:
+                    pose, t_enq = sess.pending.popleft()
+                    poses[i, k] = pose
+                    slot_stamps.append(t_enq)
+                    k += 1
+                counts[i] = k
+                if k:
+                    # Pad the tail with the last real pose: masked frames
+                    # still trace the render, so keep their inputs tame.
+                    poses[i, k:] = poses[i, k - 1]
+                if sess.carry is None:
+                    sess.carry = engine.init_carry(self.cam, poses[i, 0])
+                carries.append(sess.carry)
+                sids.append(sid)
+            else:
+                carries.append(self._idle_carry)
+                sids.append(None)
+            stamps.append(tuple(slot_stamps))
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+        return SlotBatch(poses=jnp.asarray(poses),
+                         counts=jnp.asarray(counts),
+                         phases=jnp.asarray(phases), carries=stacked,
+                         sids=tuple(sids), enq_times=tuple(stamps))
+
+    def commit(self, batch: SlotBatch, result: StreamsResult,
+               manager: SessionManager, now: float) -> List["StreamSession"]:
+        """Write back carries/latencies; detach drained sessions.
+
+        Returns the sessions detached this round (their slots free up for
+        the next ``admit``; the server keeps them for final stats).
+        """
+        detached: List = []
+        for i, sid in enumerate(batch.sids):
+            if sid is None:
+                continue
+            if sid not in manager.sessions:
+                # Cancelled externally (manager.detach) mid-flight: the
+                # rendered chunk has no consumer, but the slot must not
+                # leak.
+                if self._slot_sid[i] == sid:
+                    self._slot_sid[i] = None
+                continue
+            sess = manager.sessions[sid]
+            sess.carry = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                                result.carries)
+            n = int(np.asarray(batch.counts)[i])
+            sess.frames_rendered += n
+            sess.latencies.extend(now - t for t in batch.enq_times[i][:n])
+            if sess.done:
+                manager.detach(sid)
+                sess.slot = None
+                self._slot_sid[i] = None
+                detached.append(sess)
+        return detached

@@ -1,0 +1,136 @@
+"""Bucketed-executable cache + workload-predictive ``rerender_capacity``.
+
+Every distinct ``(B, R, window, chunk)`` shape is a distinct XLA
+executable, so letting R float with the measured workload would compile
+an unbounded family. Two pieces bound it (ROADMAP "workload-predictive
+R"):
+
+- bucketing: R is only ever one of 2-3 fixed values
+  (``ServeConfig.r_buckets``, validated ascending/unique there);
+  ``snap_capacity`` rounds a demand estimate UP to the smallest bucket
+  that covers it (the largest bucket caps runaway demand — overflow
+  tiles then degrade to interpolation, which ``FrameRecord`` counts).
+- ``suggest_capacity``: picks the bucket from *recorded* workload — the
+  ``quantile`` of per-sparse-frame re-render demand
+  (``plan.rerender_demand``: active tiles + overflow_tiles, i.e. what an
+  uncapped plan would have used), so the choice tracks the scene and
+  trajectory actually being served rather than a static config.
+
+``ExecutableCache`` is the bookkeeping layer: one entry per bucket key,
+built lazily, with hit/miss counters the serve benchmark asserts on
+(misses == distinct compilations). The entry callables own their jit
+wrappers, so a cache entry IS a compiled executable after first use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import (Callable, Deque, Dict, Hashable, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from repro.core.plan import rerender_demand
+
+DEFAULT_R_BUCKETS = (8, 16, 32)
+
+
+def validate_buckets(buckets: Sequence[int]) -> None:
+    """Bucket lists must be ascending and unique (snap_capacity scans in
+    order, so a shuffled list would snap to the wrong executable)."""
+    if not len(buckets) or list(buckets) != \
+            sorted(set(int(r) for r in buckets)):
+        raise ValueError(
+            f"r_buckets must be ascending and unique, got {buckets}")
+
+
+def snap_capacity(demand: float, buckets: Sequence[int]) -> int:
+    """Smallest bucket covering ``demand``; the largest bucket if none do."""
+    for r in buckets:
+        if demand <= r:
+            return int(r)
+    return int(buckets[-1])
+
+
+def pick_capacity(sparse_demands, quantile: float,
+                  buckets: Sequence[int]) -> int:
+    """The bucket covering the ``quantile`` of per-sparse-frame demands
+    (smallest bucket when nothing has been observed yet)."""
+    demands = np.asarray(sparse_demands).reshape(-1)
+    if demands.size == 0:
+        return int(buckets[0])
+    return snap_capacity(float(np.quantile(demands, quantile)), buckets)
+
+
+def suggest_capacity(records, quantile: float = 0.9,
+                     buckets: Sequence[int] = DEFAULT_R_BUCKETS,
+                     frame_mask=None) -> int:
+    """Pick ``rerender_capacity`` from recorded overflow stats.
+
+    ``records`` is anything exposing stacked ``FrameRecord`` fields
+    (``StackedRecords``, ``(F, ...)`` or ``(B, F, ...)``). Demand is
+    measured on sparse frames only (full frames always re-render every
+    tile); ``frame_mask`` (e.g. ``StreamsResult.frame_active``) further
+    restricts to real — non-padding — frames. With no sparse frames
+    observed yet, returns the smallest bucket.
+    """
+    active = np.asarray(records.active)
+    overflow = np.asarray(records.overflow_tiles)
+    is_full = np.asarray(records.is_full)
+    demand = np.asarray(rerender_demand(active, overflow)).reshape(-1)
+    sparse = ~is_full.reshape(-1)
+    if frame_mask is not None:
+        sparse &= np.asarray(frame_mask).reshape(-1)
+    return pick_capacity(demand[sparse], quantile, buckets)
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    fn: Callable
+    hits: int = 0
+
+
+class ExecutableCache:
+    """Lazily-built callables keyed by bucket tuple, with hit/miss stats.
+
+    ``log`` keeps the most recent lookups only (the counters are exact
+    for the whole lifetime) so a long-running server's memory stays flat.
+    """
+
+    LOG_KEEP = 1024
+
+    def __init__(self):
+        self._entries: Dict[Hashable, CacheEntry] = {}
+        self.misses = 0
+        self.hits = 0
+        self.log: Deque[Tuple[str, Hashable]] = deque(maxlen=self.LOG_KEEP)
+
+    def get(self, key: Hashable,
+            builder: Optional[Callable[[], Callable]] = None) -> Callable:
+        entry = self._entries.get(key)
+        if entry is None:
+            if builder is None:
+                raise KeyError(key)
+            self.misses += 1
+            self.log.append(("miss", key))
+            entry = self._entries[key] = CacheEntry(fn=builder())
+        else:
+            self.hits += 1
+            entry.hits += 1
+            self.log.append(("hit", key))
+        return entry.fn
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        return {
+            "distinct_executables": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "keys": [list(map(str, k)) if isinstance(k, tuple) else str(k)
+                     for k in self._entries],
+        }

@@ -1,0 +1,100 @@
+"""Device placement: shard stream slots across devices, degrade to one.
+
+``engine.render_streams`` vmaps B streams on one device; under vmap the
+full/sparse ``lax.cond`` lowers to a select, so every stream pays BOTH
+branches every step (the caveat in core/engine.py). ``shard_map`` over a
+1-D "streams" mesh fixes both costs at once: each device renders only
+its B/D local slots, and when the local shard is a single stream the
+scan body keeps a genuine ``lax.cond`` — that device executes only the
+branch its stream actually takes, so concurrent streams stop paying each
+other's full-render branches (with B == device count, the phase stagger
+finally saves device FLOPs, not just recorded workload).
+
+Degrades gracefully: ``stream_mesh`` returns None unless >1 device can
+split B evenly (it trims to the largest divisor), and ``build_render_fn``
+then falls back to the plain single-device ``render_streams`` — the
+serve loop never branches on topology.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import engine
+from repro.core.camera import Camera
+from repro.core.engine import StreamsResult
+from repro.core.pipeline import RenderConfig, StackedRecords
+
+
+def stream_mesh(num_slots: int, devices=None) -> Optional[Mesh]:
+    """1-D "streams" mesh over the most devices that divide ``num_slots``.
+
+    None when that is a single device — the caller should use the plain
+    vmapped path.
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    d = min(len(devices), int(num_slots))
+    while d > 1 and num_slots % d:
+        d -= 1
+    if d <= 1:
+        return None
+    return Mesh(np.asarray(devices[:d]), ("streams",))
+
+
+def build_render_fn(cam: Camera, cfg: RenderConfig,
+                    mesh: Optional[Mesh] = None):
+    """``fn(scene, poses, counts, phases, carries) -> StreamsResult``.
+
+    The uniform serving-layer entry point: with a mesh, a jitted
+    shard_map of the masked stream scan (slots split over "streams",
+    scene/camera replicated); without one, ``engine.render_streams``.
+    One compiled executable per (B, F, cfg) either way — the serve
+    cache (serve/cache.py) keys these builders by bucket.
+    """
+    if mesh is None:
+        def fn(scene, poses, counts, phases, carries):
+            return engine.render_streams(scene, cam, poses, cfg,
+                                         phases=phases, counts=counts,
+                                         carries=carries)
+        return fn
+
+    def local_fn(scene, poses, counts, phases, carries):
+        # Shapes here are the per-device shard: (B/D, F, 4, 4) etc.
+        if poses.shape[0] == 1:
+            # Single local stream: skip vmap so the full/sparse
+            # lax.cond stays a real branch on this device.
+            squeeze = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
+            carry_end, (frames, recs, active) = engine.stream_scan(
+                scene, cam, poses[0], counts[0], phases[0], cfg,
+                squeeze(carries))
+            expand = lambda t: jax.tree_util.tree_map(
+                lambda a: a[None], t)
+            return (expand(carry_end), frames[None], expand(recs),
+                    active[None])
+        run = lambda p, c, ph, cy: engine.stream_scan(
+            scene, cam, p, c, ph, cfg, cy)
+        carry_end, (frames, recs, active) = jax.vmap(run)(
+            poses, counts, phases, carries)
+        return carry_end, frames, recs, active
+
+    sharded = P("streams")
+    smapped = jax.jit(shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), sharded, sharded, sharded, sharded),
+        out_specs=(sharded, sharded, sharded, sharded),
+        check_rep=False))
+
+    def fn(scene, poses, counts, phases, carries):
+        counts = jnp.asarray(counts, jnp.int32)
+        phases = jnp.asarray(phases, jnp.int32)
+        carry_end, frames, recs, active = smapped(scene, poses, counts,
+                                                  phases, carries)
+        return StreamsResult(frames=frames, records=StackedRecords(recs),
+                             phases=phases, counts=counts,
+                             frame_active=active, carries=carry_end)
+    return fn

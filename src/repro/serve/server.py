@@ -1,0 +1,279 @@
+"""The serve loop: sessions -> batcher -> cached executable -> metrics.
+
+One ``StreamServer.step()`` is a serving round: admit waiting streams to
+free slots, pack up to ``chunk`` pending poses per stream into the fixed
+(B, chunk) batch, render it through the executable for the CURRENT
+R bucket (built lazily by the ``ExecutableCache``; sharded across
+devices when ``placement.stream_mesh`` finds a usable mesh), then commit
+carries back and stamp per-frame latencies (enqueue -> round end, wall
+clock).
+
+Capacity is workload-predictive: the server keeps a rolling history of
+per-frame re-render demand from the rendered ``FrameRecord``s (real,
+non-padding frames only) and every ``adapt_every`` rounds re-picks the
+R bucket via ``cache.suggest_capacity``. Switching buckets changes the
+cache key — with 2-3 buckets the total number of distinct compilations
+stays bounded no matter how long the server runs, which is the point of
+bucketing (asserted in benchmarks/serve_bench.py).
+
+``PoissonTraffic`` drives benchmarks and tests: streams arrive per round
+with Poisson counts, each carrying a heterogeneous trajectory
+(dolly/orbit, randomized geometry and length) over the one shared scene.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.camera import Camera
+from repro.core.pipeline import RenderConfig
+from repro.scenes.trajectory import dolly_trajectory, orbit_trajectory
+from repro.serve.batcher import ContinuousBatcher
+from repro.core.plan import rerender_demand
+from repro.serve.cache import (ExecutableCache, pick_capacity,
+                               validate_buckets)
+from repro.serve.placement import build_render_fn, stream_mesh
+from repro.serve.session import SessionManager, StreamSession
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 8              # B: stream slots per batch
+    chunk: int = 4              # F: frames per stream per round
+    r_buckets: Tuple[int, ...] = (8, 16, 32)
+    quantile: float = 0.9       # demand quantile for capacity selection
+    adapt_every: int = 4        # rounds between capacity re-evaluation
+    history: int = 4096         # demand samples kept for the quantile
+    use_sharding: bool = True   # shard slots over devices when possible
+
+    def __post_init__(self):
+        validate_buckets(self.r_buckets)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    n_streams: int = 12         # total arrivals over the run
+    rate: float = 2.0           # mean arrivals per round (Poisson)
+    min_frames: int = 6
+    max_frames: int = 16
+    seed: int = 0
+
+
+class PoissonTraffic:
+    """Poisson arrivals of heterogeneous trajectories over one scene."""
+
+    def __init__(self, cfg: TrafficConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.remaining = int(cfg.n_streams)
+
+    @property
+    def done(self) -> bool:
+        return self.remaining <= 0
+
+    def _trajectory(self) -> np.ndarray:
+        c = self.cfg
+        n = int(self.rng.integers(c.min_frames, c.max_frames + 1))
+        if self.rng.random() < 0.5:
+            dx, dy = self.rng.uniform(-0.4, 0.4), self.rng.uniform(-0.4, 0.1)
+            return np.asarray(dolly_trajectory(
+                n, start=(dx, dy, self.rng.uniform(-3.0, -1.5)),
+                target=(0.0, 0.0, 6.0)))
+        return np.asarray(orbit_trajectory(
+            n, radius=self.rng.uniform(5.0, 8.0), target=(0.0, 0.0, 6.0),
+            height=self.rng.uniform(-1.0, 0.0)))
+
+    def arrivals(self) -> List[np.ndarray]:
+        if self.done:
+            return []
+        k = int(min(self.rng.poisson(self.cfg.rate), self.remaining))
+        self.remaining -= k
+        return [self._trajectory() for _ in range(k)]
+
+
+class StreamServer:
+    """Continuous-batching stream server over one scene (module docstring)."""
+
+    TRACE_KEEP = 1024     # most recent per-round dicts kept for report()
+    LATENCY_KEEP = 65536  # most recent per-frame latency samples kept
+
+    def __init__(self, scene, cam: Camera, base_cfg: RenderConfig,
+                 scfg: ServeConfig = ServeConfig()):
+        self.scene = scene
+        self.cam = cam
+        self.base_cfg = base_cfg
+        self.scfg = scfg
+        self.manager = SessionManager(base_cfg.window)
+        self.batcher = ContinuousBatcher(scfg.slots, scfg.chunk, cam)
+        self.cache = ExecutableCache()
+        self.mesh = stream_mesh(scfg.slots) if scfg.use_sharding else None
+        self.capacity = int(scfg.r_buckets[0])
+        self.capacity_history: List[int] = [self.capacity]
+        self.streams_seen = 0
+        self.streams_finished = 0
+        # Bounded recent-latency reservoir: exact counters above stay
+        # lifetime-accurate, percentiles are over the newest samples —
+        # finished StreamSession objects are NOT retained (a churning
+        # server would otherwise grow memory without bound).
+        self._latencies: Deque[float] = deque(maxlen=self.LATENCY_KEEP)
+        self.rounds = 0
+        self.busy_rounds = 0
+        self.active_slot_frames = 0
+        self.render_seconds = 0.0
+        self.warmup_seconds = 0.0
+        self.max_concurrent = 0
+        self.trace: Deque[dict] = deque(maxlen=self.TRACE_KEEP)
+        # Rolling per-sparse-frame demand samples (flat ints — all the
+        # capacity picker needs), newest last.
+        self._demand: Deque[int] = deque(maxlen=scfg.history)
+
+    # -- lifecycle ---------------------------------------------------------
+    def clock(self) -> float:
+        return time.perf_counter()
+
+    def attach(self, poses, now: Optional[float] = None) -> StreamSession:
+        sess = self.manager.attach(
+            poses, now=self.clock() if now is None else now)
+        self.streams_seen += 1
+        return sess
+
+    # -- executable selection ----------------------------------------------
+    def _key_for(self, r: int):
+        return (self.scfg.slots, self.scfg.chunk, int(r),
+                self.base_cfg.window)
+
+    def _build_for(self, r: int):
+        cfg = dataclasses.replace(self.base_cfg, rerender_capacity=int(r))
+        return build_render_fn(self.cam, cfg, self.mesh)
+
+    def _executable(self):
+        r = self.capacity
+        return self.cache.get(self._key_for(r), lambda: self._build_for(r))
+
+    def warmup(self) -> float:
+        """Compile every bucket's executable before taking traffic.
+
+        Runs each bucket once on an all-masked (count-0) batch so jit
+        compile cost lands here instead of inside the first serving
+        rounds' latencies. Returns wall seconds spent. Optional — an
+        unwarmed server lazily compiles (at most) one executable per
+        bucket on first use, it just bills that to the unlucky round.
+        Safe mid-serving: the warmup batch is synthesized from scratch
+        (``empty_batch``), never popping bound sessions' poses.
+        """
+        t0 = self.clock()
+        batch = self.batcher.empty_batch()
+        for r in self.scfg.r_buckets:
+            fn = self.cache.get(self._key_for(r),
+                                lambda r=r: self._build_for(r))
+            jax.block_until_ready(fn(self.scene, batch.poses, batch.counts,
+                                     batch.phases, batch.carries).frames)
+        self.warmup_seconds = self.clock() - t0
+        return self.warmup_seconds
+
+    def _observe(self, result) -> None:
+        """Fold the round's records into the demand history; re-pick R.
+
+        Only real (non-padding) sparse frames contribute demand samples
+        — ``plan.rerender_demand`` per frame, the same statistic
+        ``cache.suggest_capacity`` computes from raw records. The adapt
+        cadence counts BUSY rounds (this method only runs on those), so
+        traffic gaps never starve adaptation.
+        """
+        recs = result.records
+        mask = np.asarray(result.frame_active).reshape(-1)
+        sparse = mask & ~np.asarray(recs.is_full).reshape(-1)
+        if sparse.any():
+            demand = np.asarray(rerender_demand(
+                recs.active, recs.overflow_tiles)).reshape(-1)
+            self._demand.extend(demand[sparse].tolist())
+        if self._demand and self.busy_rounds % self.scfg.adapt_every == 0:
+            new_cap = pick_capacity(list(self._demand), self.scfg.quantile,
+                                    self.scfg.r_buckets)
+            if new_cap != self.capacity:
+                self.capacity = new_cap
+                self.capacity_history.append(new_cap)
+
+    # -- the serving round -------------------------------------------------
+    def step(self) -> dict:
+        self.rounds += 1
+        self.batcher.admit(self.manager)
+        self.max_concurrent = max(self.max_concurrent, self.batcher.bound)
+        batch = self.batcher.build(self.manager)
+        if batch.active_frames == 0:
+            info = {"round": self.rounds, "frames": 0,
+                    "bound_slots": self.batcher.bound,
+                    "capacity": self.capacity}
+            self.trace.append(info)
+            return info
+        fn = self._executable()
+        t0 = self.clock()
+        result = fn(self.scene, batch.poses, batch.counts, batch.phases,
+                    batch.carries)
+        jax.block_until_ready((result.frames, result.carries))
+        t1 = self.clock()
+        detached = self.batcher.commit(batch, result, self.manager, t1)
+        self.streams_finished += len(detached)
+        counts = np.asarray(batch.counts)
+        for i in range(len(batch.sids)):
+            self._latencies.extend(
+                t1 - t for t in batch.enq_times[i][:counts[i]])
+        self.busy_rounds += 1          # before _observe: its adapt cadence
+        self._observe(result)          # counts busy rounds
+        self.active_slot_frames += batch.active_frames
+        self.render_seconds += t1 - t0
+        info = {"round": self.rounds, "frames": batch.active_frames,
+                "bound_slots": sum(s is not None for s in batch.sids),
+                "capacity": self.capacity,
+                "render_seconds": round(t1 - t0, 4),
+                "detached": len(detached)}
+        self.trace.append(info)
+        return info
+
+    def run(self, traffic: Optional[PoissonTraffic] = None,
+            max_rounds: int = 1000) -> dict:
+        """Serve until traffic is drained (or ``max_rounds``); report."""
+        while self.rounds < max_rounds:
+            if traffic is not None:
+                for poses in traffic.arrivals():
+                    self.attach(poses)
+            if (traffic is None or traffic.done) and not self.manager.sessions:
+                break
+            self.step()
+        return self.report()
+
+    # -- metrics -----------------------------------------------------------
+    def report(self) -> dict:
+        lat = np.asarray(self._latencies)
+        frames = int(self.active_slot_frames)
+        cap_frames = self.busy_rounds * self.scfg.slots * self.scfg.chunk
+        return {
+            "streams_served": self.streams_seen,
+            "streams_finished": self.streams_finished,
+            "max_concurrent": self.max_concurrent,
+            "frames": frames,
+            "rounds": self.rounds,
+            "busy_rounds": self.busy_rounds,
+            "latency_p50_ms": round(1e3 * float(np.percentile(lat, 50)), 3)
+            if lat.size else None,
+            "latency_p99_ms": round(1e3 * float(np.percentile(lat, 99)), 3)
+            if lat.size else None,
+            "frames_per_second": round(frames / self.render_seconds, 2)
+            if self.render_seconds > 0 else None,
+            "slot_utilization": round(self.active_slot_frames / cap_frames,
+                                      4) if cap_frames else 0.0,
+            "capacity": self.capacity,
+            "capacity_history": list(self.capacity_history),
+            "warmup_seconds": round(self.warmup_seconds, 3),
+            "rounds_trace": list(self.trace),
+            "cache_log": [{"event": ev, "key": list(map(str, key))}
+                          for ev, key in self.cache.log],
+            "num_devices": int(self.mesh.size) if self.mesh is not None
+            else 1,
+            "cache": self.cache.stats(),
+        }
