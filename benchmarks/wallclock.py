@@ -7,7 +7,12 @@ legacy per-frame dispatch loop.
 
 The dense-vs-compacted sweep is also written to
 ``experiments/artifacts/plan_compaction.json`` (overwritten per run) so
-the speedup numbers ride along with the repo."""
+the speedup numbers ride along with the repo, and the
+dense-vs-compacted-vs-fused kernel sweep (the ``pallas_fused`` plan-slot
+path, DESIGN.md §9) to ``experiments/artifacts/pallas_raster.json``.
+On CPU the Pallas rows run in interpret mode — a correctness/shape
+record, not a speed claim; the same sweep compiled on TPU is where the
+fused path's win is measured."""
 from __future__ import annotations
 
 import functools
@@ -31,6 +36,14 @@ PLAN_CAPS = (9, 18, 36, 72)
 
 _ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                          "artifacts", "plan_compaction.json")
+_PALLAS_ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                                "experiments", "artifacts",
+                                "pallas_raster.json")
+# Fused-sweep sizing: K kept below the RenderConfig default so the
+# interpret-mode rows stay minutes-not-hours on CPU; R matches the
+# serve-layer's largest default bucket.
+FUSED_K = 256
+FUSED_R = 32
 
 
 def _plan_compaction_rows(scene, cam, poses) -> List[dict]:
@@ -68,6 +81,63 @@ def _plan_compaction_rows(scene, cam, poses) -> List[dict]:
     return rows
 
 
+def _pallas_raster_rows(scene, cam, poses) -> List[dict]:
+    """Dense vs plan-compacted vs fused-kernel sparse frames, plus the
+    raster stage isolated over identical bins for every impl.
+
+    Three frame rows tell the story the paper's accelerator makes on
+    hardware: the dense path pays T-shaped stages, the compacted plan
+    pays R-shaped stages, and the fused kernel additionally folds the
+    GSU sort into the raster pass (one VMEM residency per slot)."""
+    t = cam.num_tiles
+    rows = []
+
+    # -- raster stage isolated: identical (T, K) bins through each impl --
+    proj = projection.preprocess(scene, cam)
+    grid = intersect.make_tile_grid(cam)
+    mask = intersect.tait_mask(proj, grid)
+    bins = binning.build_tile_bins(mask, proj.depth, FUSED_K)
+    tg = binning.gather_tiles(proj, bins)
+    args = (tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
+            grid.origins, bins.count)
+    for impl in ("jnp_chunked", "pallas", "pallas_fused"):
+        t_call = timed(functools.partial(kops.raster_tiles, impl=impl), *args)
+        rows.append({
+            "bench": "pallas_raster", "stage": f"raster_stage_{impl}",
+            "plan_slots": t, "capacity": FUSED_K,
+            "us_per_call": round(t_call * 1e6, 1),
+            "derived": "interpret-mode on CPU"
+            if impl.startswith("pallas") else ""})
+
+    # -- planned sparse frames: dense / compacted / compacted+fused ------
+    key_cfg = RenderConfig(window=5, capacity=FUSED_K, impl="jnp_chunked")
+    full_fn = jax.jit(functools.partial(render_full_frame, cfg=key_cfg))
+    _, state, _ = full_fn(scene, cam.with_pose(poses[0]))
+
+    def sparse_time(rcap, impl):
+        cfg = RenderConfig(window=5, capacity=FUSED_K,
+                           rerender_capacity=rcap, impl=impl)
+        fn = jax.jit(functools.partial(render_sparse_frame, cfg=cfg))
+        return timed(lambda: fn(scene, cam.with_pose(poses[0]),
+                                cam.with_pose(poses[1]), state))
+
+    t_dense = sparse_time(None, "jnp_chunked")
+    t_comp = sparse_time(FUSED_R, "jnp_chunked")
+    t_fused = sparse_time(FUSED_R, "pallas_fused")
+    for stage, slots, t_call, derived in (
+            ("sparse_dense", t, t_dense, "R=T reference, jnp_chunked"),
+            ("sparse_compacted", FUSED_R, t_comp,
+             f"speedup={t_dense / t_comp:.2f}x vs dense, jnp_chunked"),
+            ("sparse_fused", FUSED_R, t_fused,
+             f"pallas_fused (interpret on CPU), "
+             f"{t_dense / t_fused:.2f}x vs dense")):
+        rows.append({
+            "bench": "pallas_raster", "stage": stage, "plan_slots": slots,
+            "capacity": FUSED_K, "us_per_call": round(t_call * 1e6, 1),
+            "derived": derived})
+    return rows
+
+
 def run() -> List[dict]:
     cam = camera()
     scene = scenes()["indoor"]
@@ -95,19 +165,14 @@ def run() -> List[dict]:
     with open(_ARTIFACT, "w") as f:
         json.dump(plan_rows, f, indent=1)
 
-    # isolated raster stage via bins (jnp_chunked vs pallas-interpret)
-    proj = projection.preprocess(scene, cam)
-    grid = intersect.make_tile_grid(cam)
-    mask = intersect.tait_mask(proj, grid)
-    bins = binning.build_tile_bins(mask, proj.depth, cfg.capacity)
-    tg = binning.gather_tiles(proj, bins)
-    args = (tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
-            grid.origins, bins.count)
-    for impl in ("jnp_chunked", "pallas"):
-        t = timed(functools.partial(kops.raster_tiles, impl=impl), *args)
-        rows.append({"bench": "wallclock", "stage": f"raster_{impl}",
-                     "us_per_call": round(t * 1e6, 1),
-                     "derived": "interpret-mode" if impl == "pallas" else ""})
+    # dense vs compacted vs fused-kernel sweep (DESIGN.md §9)
+    fused_rows = _pallas_raster_rows(scene, cam, poses)
+    rows.extend(fused_rows)
+    with open(_PALLAS_ARTIFACT, "w") as f:
+        json.dump(fused_rows, f, indent=1)
+
+    # (The isolated raster stage now lives in _pallas_raster_rows, which
+    # sweeps all three impls over identical bins — no duplicate timing.)
 
     # scanned engine (one executable, stacked records) vs the legacy
     # per-frame dispatch loop — the "no host roundtrips" claim in numbers.

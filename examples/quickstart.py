@@ -2,6 +2,12 @@
 then stream a short trajectory through the scanned engine.
 
   PYTHONPATH=src python examples/quickstart.py [--out /tmp/frame.ppm]
+  PYTHONPATH=src python examples/quickstart.py --impl pallas_fused
+
+``--impl`` selects the raster kernel (DESIGN.md §9): ``default`` picks
+per backend (fused Pallas kernel on TPU, jnp elsewhere); forcing
+``pallas_fused`` off-TPU runs the kernel in interpret mode — slow, but
+exactly the CI parity smoke.
 """
 import argparse
 
@@ -27,13 +33,23 @@ def main() -> None:
     ap.add_argument("--out", default="/tmp/quickstart.ppm")
     ap.add_argument("--size", type=int, default=256)
     ap.add_argument("--gaussians", type=int, default=4000)
+    ap.add_argument("--capacity", type=int, default=512,
+                    help="K: max sorted pairs per tile")
+    from repro.kernels.ops import RASTER_IMPLS, default_impl
+    ap.add_argument("--impl", default="default",
+                    choices=("default",) + RASTER_IMPLS,
+                    help="raster kernel (default: per-backend choice)")
     args = ap.parse_args()
+
+    impl = default_impl() if args.impl == "default" else args.impl
 
     scene = structured_scene(jax.random.PRNGKey(0), args.gaussians,
                              clutter=0.5)
     cam = make_camera(look_at((0.0, -0.5, -3.0), (0.0, 0.0, 6.0)),
                       width=args.size, height=args.size)
-    cfg = RenderConfig(intersect_method="tait", capacity=512)
+    cfg = RenderConfig(intersect_method="tait", capacity=args.capacity,
+                      impl=impl)
+    print(f"raster impl: {impl} (backend: {jax.default_backend()})")
     out, state, rec = jax.jit(render_full_frame,
                               static_argnames="cfg")(scene, cam, cfg=cfg)
     save_ppm(args.out, out.rgb)
@@ -52,7 +68,8 @@ def main() -> None:
     poses = dolly_trajectory(n_frames, start=(0.0, -0.5, -3.0),
                              target=(0.0, 0.0, 6.0))
     res = render_trajectory(scene, cam, poses,
-                            RenderConfig(window=window))
+                            RenderConfig(window=window, impl=impl,
+                                         capacity=args.capacity))
     full = np.asarray(res.records.is_full)
     pairs = np.asarray(res.records.raster_pairs).sum(axis=1)
     print(f"\nstreamed {n_frames} frames (window n={window}, one scan):")

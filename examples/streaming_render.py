@@ -10,6 +10,10 @@ vmapped dispatch (the many-users-one-scene serving scenario).
 
   PYTHONPATH=src python examples/streaming_render.py --frames 20
   PYTHONPATH=src python examples/streaming_render.py --streams 4
+  PYTHONPATH=src python examples/streaming_render.py --impl pallas_fused
+
+``--impl`` selects the raster kernel (DESIGN.md §9); ``default`` picks
+the fused Pallas plan-slot kernel on TPU and jnp elsewhere.
 """
 import argparse
 
@@ -35,14 +39,21 @@ def main() -> None:
     ap.add_argument("--gaussians", type=int, default=3000)
     ap.add_argument("--streams", type=int, default=0,
                     help="also render B concurrent staggered streams")
+    from repro.kernels.ops import RASTER_IMPLS, default_impl
+    ap.add_argument("--impl", default="default",
+                    choices=("default",) + RASTER_IMPLS,
+                    help="raster kernel (default: per-backend choice)")
     args = ap.parse_args()
+
+    impl = default_impl() if args.impl == "default" else args.impl
 
     scene = structured_scene(jax.random.PRNGKey(7), args.gaussians,
                              clutter=0.35)
     cam = make_camera(jax.numpy.eye(4), width=args.size, height=args.size)
     poses = dolly_trajectory(args.frames, start=(0.0, -0.3, -3.0),
                              target=(0.0, 0.0, 6.0))
-    cfg = RenderConfig(window=args.window)
+    cfg = RenderConfig(window=args.window, impl=impl)
+    print(f"raster impl: {impl} (backend: {jax.default_backend()})")
 
     print(f"streaming {args.frames} frames, window n={args.window} "
           f"(1 full render per {args.window} frames, single lax.scan)")

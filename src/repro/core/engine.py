@@ -10,7 +10,10 @@ no host involvement, and ``jax.vmap``s that scan over a leading stream
 axis for batched multi-user serving. Both frame branches are thin
 wrappers over the plan-driven ``pipeline.render_planned_frame`` — the
 TilePlan construction AND the device-LDU schedule it records run inside
-this scan (DESIGN.md §2).
+this scan (DESIGN.md §2), and both branches raster through
+``RenderConfig.impl`` (DESIGN.md §9: the fused plan-slot Pallas kernel
+on TPU backends by default), so every stream and the serve loop inherit
+the kernel selection with no engine-level switches.
 
 Scan carry layout (``EngineCarry``):
 

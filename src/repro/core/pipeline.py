@@ -36,6 +36,7 @@ from repro.core.camera import TILE, Camera
 from repro.core.plan import TilePlan
 from repro.core.projection import preprocess
 from repro.core.raster import RenderOutput, render_plan_slots, untile
+from repro.kernels.ops import default_impl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +44,10 @@ class RenderConfig:
     intersect_method: str = "tait"      # "aabb" | "obb" | "tait" | "exact"
     capacity: int = 512                 # K: max pairs per tile
     chunk: int = 64                     # rasterizer gaussian-chunk
-    impl: str = "jnp_chunked"           # "pallas" | "jnp_chunked" | "ref"
+    # Raster kernel selection (DESIGN.md §9): "pallas_fused" (the fused
+    # plan-slot sort+raster kernel — default on TPU) | "pallas" |
+    # "jnp_chunked" (default elsewhere) | "ref".
+    impl: str = dataclasses.field(default_factory=default_impl)
     window: int = 5                     # full render every n-th frame
     use_mask: bool = True               # no-cumulative-error mask (Fig. 7)
     use_dpes: bool = True
@@ -145,7 +149,8 @@ def render_planned_frame(scene, cam: Camera, plan: TilePlan,
     plan = plan_mod.schedule_plan(plan, bins.count, cfg.ldu_blocks)
 
     out = render_plan_slots(proj, bins, slots.origins, plan.tile_ids, grid,
-                            impl=cfg.impl, chunk=cfg.chunk)
+                            impl=cfg.impl, chunk=cfg.chunk,
+                            slot_active=plan.slot_active)
     stats = PlanStats(candidate_pairs=candidate_pairs, raw_slots=raw_slots,
                       overflow_pairs=jnp.sum(bins.overflow))
     n_gaussians = jnp.sum(proj.valid.astype(jnp.int32))

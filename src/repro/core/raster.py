@@ -67,19 +67,23 @@ def render_from_bins(proj: ProjectedGaussians, bins: binning.TileBins,
 def render_plan_slots(proj: ProjectedGaussians, bins: binning.TileBins,
                       slot_origins: jax.Array, tile_ids: jax.Array,
                       grid: TileGrid, *, impl: str = "jnp_chunked",
-                      chunk: int = 64) -> RenderOutput:
+                      chunk: int = 64,
+                      slot_active: jax.Array | None = None) -> RenderOutput:
     """Rasterize a TilePlan's R slots, scatter back to the (T,) frame.
 
     ``bins`` is the (R, K) compacted binning; ``slot_origins``/``tile_ids``
-    come from the plan (``intersect.take_tiles`` / ``TilePlan.tile_ids``).
-    Tiles outside the plan never reach the rasterizer and read back as
-    empty (rgb/depth 0, transmittance 1, 0 processed pairs) — this is
-    where TWSR's wall-clock win comes from on real hardware.
+    come from the plan (``intersect.take_tiles`` / ``TilePlan.tile_ids``)
+    and ``slot_active`` is the plan's slot mask — on the fused Pallas path
+    it drives the per-slot early exit (DESIGN.md §9). Tiles outside the
+    plan never reach the rasterizer and read back as empty (rgb/depth 0,
+    transmittance 1, 0 processed pairs) — this is where TWSR's wall-clock
+    win comes from on real hardware.
     """
     tg = binning.gather_tiles(proj, bins)
     rgb_s, trans_s, d_s, td_s, proc = kops.raster_tiles(
         tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
-        slot_origins, bins.count, impl=impl, chunk=chunk)
+        slot_origins, bins.count, impl=impl, chunk=chunk,
+        slot_active=slot_active)
     t = grid.num_tiles
     rgb_all = jnp.zeros((t, TILE, TILE, 3)).at[tile_ids].set(rgb_s)
     trans_all = jnp.full((t, TILE, TILE), 1.0).at[tile_ids].set(trans_s)

@@ -1,7 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Every op takes ``impl`` selecting between:
-  - "pallas"      : the Pallas kernel (interpret=True on CPU, compiled on TPU)
+Every op takes ``impl`` selecting between (DESIGN.md §9):
+  - "pallas_fused": the fused per-slot sort+raster Pallas kernel
+                    (kernels/raster_plan.py) — the default device path on
+                    TPU backends (see ``default_impl``)
+  - "pallas"      : the raster-only Pallas kernel over pre-sorted bins
+                    (interpret=True on CPU, compiled on TPU)
   - "jnp_chunked" : vectorized pure-jnp path with identical chunked math —
                     the fast CPU execution path used by benchmarks
   - "ref"         : the sequential oracle (kernels/ref.py)
@@ -18,11 +22,24 @@ from repro.core.camera import TILE
 from repro.kernels import ref as ref_kernels
 from repro.kernels.raster_tile import (ALPHA_MAX, ALPHA_MIN, T_EPS,
                                        raster_tiles_pallas)
+from repro.kernels.raster_plan import raster_plan_fused
 from repro.kernels.preprocess import preprocess_geom_pallas
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# Valid ``impl`` names for raster_tiles, in preference order — the single
+# source of truth example CLIs build their --impl choices from.
+RASTER_IMPLS = ("pallas_fused", "pallas", "jnp_chunked", "ref")
+
+
+def default_impl() -> str:
+    """The raster ``impl`` for this backend: the fused plan-slot kernel on
+    TPU, the vectorized jnp path everywhere else (interpret-mode Pallas is
+    a correctness tool, not an execution path — DESIGN.md §9)."""
+    return "pallas_fused" if _on_tpu() else "jnp_chunked"
 
 
 def _raster_tile_chunked_jnp(mean2d, conic, rgb, opacity, depth, origin,
@@ -83,7 +100,7 @@ def _raster_tile_chunked_jnp(mean2d, conic, rgb, opacity, depth, origin,
 @functools.partial(jax.jit, static_argnames=("impl", "chunk", "tile"))
 def raster_tiles(mean2d, conic, rgb, opacity, depth, origins, counts,
                  *, impl: str = "jnp_chunked", chunk: int = 64,
-                 tile: int = TILE):
+                 tile: int = TILE, slot_active=None):
     """Rasterize a batch of tiles: inputs (R, K, ...) -> 5 outputs.
 
     The leading axis is whatever tile set the caller planned — all T
@@ -93,7 +110,19 @@ def raster_tiles(mean2d, conic, rgb, opacity, depth, origins, counts,
     expected_depth, truncated_depth, processed_pairs) — the last is (R,)
     int32 pairs traversed before the early-stop exit (chunk-granular for
     pallas/jnp_chunked, exact for ref).
+
+    ``slot_active`` (R,) bool is the TilePlan slot mask, consumed only by
+    ``impl="pallas_fused"`` (masked slots skip the in-kernel sort).
+    Contract: an inactive slot has ``counts == 0`` — the plan pipeline
+    guarantees it by masking intersections with ``plan.slot_active``
+    before binning — so every impl renders it as empty and the mask is a
+    cost hint, not a semantic input (DESIGN.md §9).
     """
+    if impl == "pallas_fused":
+        return raster_plan_fused(mean2d, conic, rgb, opacity, depth,
+                                 origins, counts, slot_active,
+                                 chunk=chunk, tile=tile,
+                                 interpret=not _on_tpu())
     if impl == "pallas":
         return raster_tiles_pallas(mean2d, conic, rgb, opacity, depth,
                                    origins, counts, chunk=chunk, tile=tile,

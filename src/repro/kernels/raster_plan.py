@@ -1,0 +1,250 @@
+"""Fused Pallas TPU kernel: per-slot depth sort + raster in one pass.
+
+This is the plan-slot production kernel (DESIGN.md §9): one grid step per
+TilePlan slot; the slot's K compacted Gaussians are loaded into VMEM
+once, depth-sorted by the GSU bitonic network (the same network as
+tile_sort.py, but the full attribute record rides the compare-exchanges
+as the payload), and immediately alpha-blended by the VRU chunk loop
+(raster_tile.py's math) — keys and values never leave VMEM between the
+sort and the raster, which is the paper's no-HBM-roundtrip streaming
+contract.
+
+Input contract (the (R, K) VMEM layout, see DESIGN.md §9):
+  - each slot's ``count`` real pairs occupy lanes ``[0, count)`` in ANY
+    depth order; lanes past ``count`` are padding (ignored — the sort
+    keys them +inf and the blend masks their opacity to 0);
+  - ``slot_active`` False implies ``count == 0`` on the plan path
+    (pipeline masks intersections by ``plan.slot_active`` before
+    binning); the kernel enforces the conjunction either way.
+
+Masked / empty slots cost ~nothing: the bitonic network is gated behind
+a ``lax.cond`` on ``slot_active & (count > 0)`` and the blend
+``while_loop`` runs zero chunks, so a sparse plan's padded slots write
+their empty outputs (rgb 0, T = 1) and move on.
+
+VMEM footprint per slot at K=1024: 10 attr lanes * 4B * K = 40 KiB
+resident, plus the (256 pixels x G-chunk) blend intermediates — same
+budget as raster_tile.py, the sort works in-place on the resident lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.camera import TILE
+from repro.kernels.raster_tile import ALPHA_MAX, ALPHA_MIN, T_EPS
+
+
+def _fused_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
+                  origin_ref, count_ref, active_ref,
+                  rgb_out, trans_out, depth_out, tdepth_out, processed_out,
+                  *, k: int, chunk: int, tile: int):
+    p = tile * tile
+    count = count_ref[0]
+    active = (active_ref[0] > 0) & (count > 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (k, 1), 0)[:, 0]
+    in_count = lane < count
+
+    # ---- GSU: bitonic depth sort over the slot's K lanes (in VMEM) ----
+    # Padding lanes get +inf keys so they sink to the end; after the sort
+    # the slot's `count` real pairs occupy lanes [0, count) ascending in
+    # depth, exactly what the front-to-back blend below assumes.
+    #
+    # The network is expressed as reshape-paired compare-exchanges (lanes
+    # i and i^stride meet as the two halves of a (k/2s, 2, s) view) and the
+    # full attribute record rides the swaps as the sort payload — no lane
+    # gathers anywhere, neither in the network nor after it. Gather chains
+    # are what make the standalone tile_sort kernel compile in
+    # minutes-to-hours under interpret mode on CPU (tests/test_kernels_sort
+    # tiers); swap-through payloads keep the fused kernel's whole graph
+    # elementwise + reshape, which XLA compiles fast, and match how the
+    # hardware GSU streams key+record pairs through its network anyway.
+    keys0 = jnp.where(in_count, depth_ref[0, :], jnp.inf)
+    payload0 = (
+        jnp.where(in_count, opac_ref[0, :], 0.0),
+        mean_ref[0, :, 0], mean_ref[0, :, 1],
+        conic_ref[0, :, 0], conic_ref[0, :, 1], conic_ref[0, :, 2],
+        rgb_ref[0, :, 0], rgb_ref[0, :, 1], rgb_ref[0, :, 2],
+    )
+
+    def do_sort(kp):
+        keys, payload = kp
+
+        def exchange(arrs, swap, stride):
+            out = []
+            for a in arrs:
+                a2 = a.reshape(-1, 2, stride)
+                lo = jnp.where(swap, a2[:, 1], a2[:, 0])
+                hi = jnp.where(swap, a2[:, 0], a2[:, 1])
+                out.append(jnp.stack([lo, hi], axis=1).reshape(k))
+            return out
+
+        span = 2
+        while span <= k:
+            stride = span // 2
+            while stride >= 1:
+                k2 = keys.reshape(-1, 2, stride)
+                lo_k, hi_k = k2[:, 0], k2[:, 1]
+                # Low lane index of each pair is b*2*stride + j (j <
+                # stride < span), so bit log2(span) — the ascending /
+                # descending flag — is carried entirely by the pair-block
+                # index b.
+                b = jax.lax.broadcasted_iota(
+                    jnp.int32, (k // (2 * stride), 1), 0)
+                up = ((b * (2 * stride)) & span) == 0
+                swap = jnp.where(up, lo_k > hi_k, lo_k < hi_k)
+                keys, *payload = exchange([keys, *payload], swap, stride)
+                stride //= 2
+            span *= 2
+        return keys, tuple(payload)
+
+    # Masked slots skip the whole network (the blend below runs 0 chunks
+    # regardless, because used_chunks is gated on `active`).
+    keys, payload = jax.lax.cond(active, do_sort, lambda kp: kp,
+                                 (keys0, payload0))
+    op, mx, my, ca, cb, cc, cr, cg, cbl = payload
+    # Sorted depth comes free from the sort keys; padding -> 0 (not inf):
+    # it blends with w=0 and 0 * inf would NaN the depth accumulators.
+    dep = jnp.where(in_count, keys, 0.0)
+
+    # ---- VRU: chunked front-to-back blend (raster_tile.py math) ----
+    ox = origin_ref[0, 0]
+    oy = origin_ref[0, 1]
+    iy = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 0)
+    ix = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 1)
+    px = (ix + ox + 0.5).reshape(p)
+    py = (iy + oy + 0.5).reshape(p)
+
+    n_chunks = k // chunk
+    used_chunks = jnp.where(
+        active, jnp.minimum((count + chunk - 1) // chunk, n_chunks), 0)
+
+    def sl(a, i):
+        return jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk)
+
+    def chunk_body(state):
+        i, c_acc, t_run, done, d_acc, w_acc, td_max = state
+        mxs, mys = sl(mx, i), sl(my, i)
+        cas, cbs, ccs = sl(ca, i), sl(cb, i), sl(cc, i)
+        col = jnp.stack([sl(cr, i), sl(cg, i), sl(cbl, i)], axis=1)  # (G, 3)
+        ops_ = sl(op, i)
+        deps = sl(dep, i)
+
+        dx = px[:, None] - mxs[None, :]             # (P, G)
+        dy = py[:, None] - mys[None, :]
+        power = (-0.5 * (cas[None, :] * dx * dx + ccs[None, :] * dy * dy)
+                 - cbs[None, :] * dx * dy)
+        alpha = jnp.minimum(ops_[None, :] * jnp.exp(power), ALPHA_MAX)
+        alpha = jnp.where(alpha >= ALPHA_MIN, alpha, 0.0)
+
+        factors = 1.0 - alpha
+        cp = jnp.cumprod(factors, axis=1)           # inclusive prefix (P, G)
+        tp = t_run[:, None] * cp                    # T after blending j
+        t_before = t_run[:, None] * jnp.concatenate(
+            [jnp.ones_like(cp[:, :1]), cp[:, :-1]], axis=1)
+        # Sticky done across chunks, exactly raster_tile.py's semantics.
+        blend = (tp >= T_EPS) & (~done[:, None])
+        w = jnp.where(blend, alpha * t_before, 0.0)  # (P, G)
+
+        c_acc = c_acc + w @ col                     # (P, 3) MXU
+        d_acc = d_acc + jnp.sum(w * deps[None, :], axis=1)
+        w_acc = w_acc + jnp.sum(w, axis=1)
+        td_max = jnp.maximum(
+            td_max, jnp.max(jnp.where(blend & (alpha > 0.0), deps[None, :],
+                                      0.0), axis=1))
+        t_run = jnp.min(jnp.where(blend, tp, t_run[:, None]), axis=1)
+        done = done | (tp[:, -1] < T_EPS)
+        return i + 1, c_acc, t_run, done, d_acc, w_acc, td_max
+
+    def chunk_cond(state):
+        i, _, _, done, _, _, _ = state
+        return (i < used_chunks) & jnp.any(~done)
+
+    init = (jnp.int32(0),
+            jnp.zeros((p, 3), jnp.float32),
+            jnp.ones((p,), jnp.float32),
+            jnp.zeros((p,), bool),
+            jnp.zeros((p,), jnp.float32),
+            jnp.zeros((p,), jnp.float32),
+            jnp.zeros((p,), jnp.float32))
+    n_done, c_acc, t_run, done, d_acc, w_acc, td_max = jax.lax.while_loop(
+        chunk_cond, chunk_body, init)
+
+    rgb_out[0] = c_acc.reshape(tile, tile, 3)
+    trans_out[0] = t_run.reshape(tile, tile)
+    depth_out[0] = (d_acc / jnp.maximum(w_acc, 1e-8)).reshape(tile, tile)
+    tdepth_out[0] = td_max.reshape(tile, tile)
+    processed_out[0] = jnp.minimum(n_done * chunk, count)
+
+
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def raster_plan_fused(mean2d, conic, rgb, opacity, depth, origins, counts,
+                      slot_active=None, *, chunk: int = 64, tile: int = TILE,
+                      interpret: bool = True):
+    """Fused sort+raster over plan slots. Inputs (R, K, ...) compacted bins.
+
+    Per-slot lanes need NOT be depth-sorted — the kernel sorts (that is
+    the point); they must be packed (real pairs first, see module
+    docstring). ``slot_active`` (R,) bool gates whole slots (default:
+    ``counts > 0``). K is padded to a power of two internally; ``chunk``
+    must be a power of two (so it divides the padded K).
+
+    Returns rgb (R, tile, tile, 3), trans, exp_depth, trunc_depth (each
+    (R, tile, tile)), processed (R,) int32.
+    """
+    r, k = opacity.shape
+    if chunk & (chunk - 1):
+        raise ValueError(f"chunk={chunk} must be a power of two")
+    if slot_active is None:
+        slot_active = counts > 0
+
+    k_pad = _pow2_at_least(max(k, chunk))
+    if k_pad != k:
+        pad = ((0, 0), (0, k_pad - k))
+        mean2d = jnp.pad(mean2d, pad + ((0, 0),))
+        conic = jnp.pad(conic, pad + ((0, 0),))
+        rgb = jnp.pad(rgb, pad + ((0, 0),))
+        opacity = jnp.pad(opacity, pad)
+        depth = jnp.pad(depth, pad)
+
+    kernel = functools.partial(_fused_kernel, k=k_pad, chunk=chunk, tile=tile)
+    f32 = jnp.float32
+    out_shapes = (
+        jax.ShapeDtypeStruct((r, tile, tile, 3), f32),
+        jax.ShapeDtypeStruct((r, tile, tile), f32),
+        jax.ShapeDtypeStruct((r, tile, tile), f32),
+        jax.ShapeDtypeStruct((r, tile, tile), f32),
+        jax.ShapeDtypeStruct((r,), jnp.int32),
+    )
+    in_specs = [
+        pl.BlockSpec((1, k_pad, 2), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, k_pad, 3), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, k_pad, 3), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
+        pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
+        pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        pl.BlockSpec((1,), lambda i: (i,)),
+        pl.BlockSpec((1,), lambda i: (i,)),
+    ]
+    out_specs = (
+        pl.BlockSpec((1, tile, tile, 3), lambda i: (i, 0, 0, 0)),
+        pl.BlockSpec((1, tile, tile), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, tile, tile), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, tile, tile), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1,), lambda i: (i,)),
+    )
+    return pl.pallas_call(
+        kernel, grid=(r,), in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shapes, interpret=interpret,
+    )(mean2d.astype(f32), conic.astype(f32), rgb.astype(f32),
+      opacity.astype(f32), depth.astype(f32), origins.astype(f32),
+      counts.astype(jnp.int32), slot_active.astype(jnp.int32))

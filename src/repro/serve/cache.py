@@ -1,9 +1,10 @@
 """Bucketed-executable cache + workload-predictive ``rerender_capacity``.
 
-Every distinct ``(B, R, window, chunk)`` shape is a distinct XLA
-executable, so letting R float with the measured workload would compile
-an unbounded family. Two pieces bound it (ROADMAP "workload-predictive
-R"):
+Every distinct ``(B, chunk, R, window, impl)`` tuple is a distinct XLA
+executable — ``impl`` (the raster kernel path, DESIGN.md §9) changes the
+lowering just as surely as a shape does — so letting R float with the
+measured workload would compile an unbounded family. Two pieces bound it
+(ROADMAP "workload-predictive R"):
 
 - bucketing: R is only ever one of 2-3 fixed values
   (``ServeConfig.r_buckets``, validated ascending/unique there);

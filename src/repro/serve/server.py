@@ -144,8 +144,11 @@ class StreamServer:
 
     # -- executable selection ----------------------------------------------
     def _key_for(self, r: int):
+        # impl is part of the key: a kernel-path change (e.g. pallas_fused
+        # vs jnp_chunked) is a distinct XLA executable, and a server
+        # reconfigured across backends must not serve a stale cache entry.
         return (self.scfg.slots, self.scfg.chunk, int(r),
-                self.base_cfg.window)
+                self.base_cfg.window, self.base_cfg.impl)
 
     def _build_for(self, r: int):
         cfg = dataclasses.replace(self.base_cfg, rerender_capacity=int(r))
