@@ -1,30 +1,39 @@
-"""Serve-loop benchmark: continuous batching under Poisson stream churn.
+"""Serve-loop benchmark: multi-scene continuous batching under churn.
 
 Drives ``repro.serve.StreamServer`` with synthetic traffic — Poisson
-arrivals of heterogeneous dolly/orbit trajectories over one shared scene
-— and reports the serving metrics the subsystem exists for: per-frame
-latency (p50/p99, enqueue -> render-complete, wall clock), rendered
-frames/sec, slot utilization of the fixed B-slot batch, and the bucketed
-executable cache's compile/hit log (the whole run must stay within one
-compilation per R bucket — that is the recompilation bound the
-bucketing buys).
+arrivals of heterogeneous dolly/orbit trajectories round-robined over K
+registered scenes — and reports the serving metrics the subsystem
+exists for: per-frame latency (p50/p99, enqueue -> render-complete,
+wall clock), rendered frames/sec, slot utilization of the elastic
+B-slot batch, the bucketed executable cache's compile/hit log (the
+whole run must stay within one compilation per
+``(scene_bucket, B, R)`` key — that is the recompilation bound the
+bucketing buys, now across scenes AND batch sizes), and the simulated
+ASIC latency of the served frames through the paper's accelerator model
+(``core/streaming.py``, recorded-schedule policy) next to the
+wall-clock numbers.
 
 Writes ``experiments/artifacts/serve_bench.json`` (full report +
 per-round trace) and returns summary rows for ``benchmarks/run.py``.
 ``--smoke`` is the CI tier-1 configuration: tiny scene, 4 streams over
-4 slots, 2 R buckets.
+a (2, 4)-bucketed batch; CI runs it with ``--scenes 3`` so three
+same-bucket scenes exercise the shared-executable path end to end.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
-from typing import List
+from typing import List, Optional
+
+import jax
 
 from benchmarks.common import camera, scenes
 from repro.core.pipeline import RenderConfig
-from repro.serve import (PoissonTraffic, ServeConfig, StreamServer,
-                         TrafficConfig)
+from repro.scenes.synthetic import structured_scene
+from repro.serve import (PoissonTraffic, SceneRegistry, ServeConfig,
+                         StreamServer, TrafficConfig)
 
 _ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "artifacts")
@@ -34,53 +43,105 @@ ARTIFACT = os.path.join(_ARTIFACTS, "serve_bench.json")
 SMOKE_ARTIFACT = os.path.join(_ARTIFACTS, "serve_bench_smoke.json")
 
 FULL = dict(
-    image=64, n_gaussians=3000, window=4, warmup=True,
-    scfg=ServeConfig(slots=8, chunk=3, r_buckets=(4, 8, 16), quantile=0.9,
-                     adapt_every=2),
+    image=64, n_gaussians=3000, window=4, warmup=True, scenes=3,
+    scfg=ServeConfig(chunk=3, r_buckets=(4, 8, 16), b_buckets=(4, 8),
+                     quantile=0.9, adapt_every=2, sim_latency=True),
     traffic=TrafficConfig(n_streams=12, rate=6.0, min_frames=10,
                           max_frames=16, seed=0),
 )
 SMOKE = dict(
-    image=48, n_gaussians=3000, window=4,
-    scfg=ServeConfig(slots=4, chunk=2, r_buckets=(4, 8), quantile=0.9,
-                     adapt_every=2),
+    image=48, n_gaussians=3000, window=4, scenes=1,
+    scfg=ServeConfig(chunk=2, r_buckets=(4, 8), b_buckets=(2, 4),
+                     quantile=0.9, adapt_every=2, sim_latency=True),
     scene="indoor",
     traffic=TrafficConfig(n_streams=4, rate=8.0, min_frames=6,
                           max_frames=8, seed=0),
 )
 
 
-def _serve(setup: dict) -> dict:
+def _make_scenes(k: int, n: int, first: str) -> List:
+    """K distinct same-bucket scenes: the named indoor/outdoor benchmark
+    scenes first, then procedural clutter variants. All structured
+    (SH degree 1) at one N — same (padded N, sh K) bucket — so they
+    MUST share executables (the assertion below). The degree-0 blob
+    scene is deliberately excluded: a different sh shape is a different
+    bucket, which is bucket-isolation behavior the unit tests cover."""
+    named = scenes(n)
+    named.pop("synthetic")
+    ordered = [named.pop(first)] + list(named.values())
+    out = ordered[:k]
+    key = jax.random.PRNGKey(1234)
+    i = 0
+    while len(out) < k:
+        out.append(structured_scene(jax.random.fold_in(key, i), n,
+                                    clutter=0.3 + 0.1 * (i % 4)))
+        i += 1
+    return out
+
+
+def _serve(setup: dict, n_scenes: int) -> dict:
     cam = camera(setup["image"], setup["image"])
-    scene = scenes(setup["n_gaussians"])[setup.get("scene", "outdoor")]
+    registry = SceneRegistry(setup["scfg"].scene_buckets)
+    for scene in _make_scenes(n_scenes, setup["n_gaussians"],
+                              setup.get("scene", "outdoor")):
+        registry.register(scene)
     cfg = RenderConfig(window=setup["window"], capacity=256)
-    server = StreamServer(scene, cam, cfg, setup["scfg"])
+    server = StreamServer(registry, cam, cfg, setup["scfg"])
     if setup.get("warmup"):
-        # Compile all bucket executables up front so reported latencies
-        # measure serving, not jit cold-start (the smoke config skips
-        # this and eats the compiles in-round to stay short).
+        # Compile all (scene_bucket, B, R) executables up front so
+        # reported latencies measure serving, not jit cold-start (the
+        # smoke config skips this and eats the compiles in-round to
+        # stay short).
         server.warmup()
-    return server.run(PoissonTraffic(setup["traffic"]), max_rounds=200)
+    traffic = dataclasses.replace(setup["traffic"], scenes=n_scenes)
+    return server.run(PoissonTraffic(traffic), max_rounds=200)
 
 
-def run(smoke: bool = False) -> List[dict]:
+def run(smoke: bool = False, n_scenes: Optional[int] = None) -> List[dict]:
     setup = SMOKE if smoke else FULL
-    report = _serve(setup)
+    n_scenes = setup["scenes"] if n_scenes is None else int(n_scenes)
+    scfg = setup["scfg"]
+    report = _serve(setup, n_scenes)
     out = SMOKE_ARTIFACT if smoke else ARTIFACT
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(report, f, indent=1)
 
     n_exec = report["cache"]["distinct_executables"]
-    want = min(setup["scfg"].slots, setup["traffic"].n_streams)
+    max_b = max(scfg.slot_buckets)
+    want = min(max_b, setup["traffic"].n_streams)
     assert report["max_concurrent"] >= want, \
         f"expected {want} concurrent streams at peak, saw " \
         f"{report['max_concurrent']}"
-    assert n_exec <= len(setup["scfg"].r_buckets), report["cache"]
+    # The recompilation bound: one executable per (scene_bucket, B, R)
+    # key, no matter how many scenes / rounds / churn events.
+    buckets_in_use = len(report["scenes"]["buckets_in_use"])
+    max_keys = len(scfg.slot_buckets) * len(scfg.r_buckets) * buckets_in_use
+    assert n_exec <= max_keys, report["cache"]
+    # Every stream drains and detaches: no carry was dropped by scene
+    # switching or B resizes.
     assert report["streams_finished"] == setup["traffic"].n_streams
+    if n_scenes > 1:
+        # Same-bucket scene reuse: more distinct scenes served than
+        # compiled executables can only mean scenes shared executables
+        # (the hit/miss log records every reuse).
+        served_scenes = set()
+        for r in report["rounds_trace"]:
+            served_scenes.update(r.get("scene_ids", []))
+        assert len(served_scenes) >= min(n_scenes,
+                                         setup["traffic"].n_streams), \
+            f"only scenes {served_scenes} were served"
+        assert report["cache"]["hits"] > 0, report["cache"]
+    if scfg.b_buckets is not None and len(scfg.b_buckets) > 1:
+        # Elastic B: the run must contain at least one resize event
+        # (served without dropping carries, per the assert above).
+        assert len(set(report["slots_history"])) >= 2, \
+            report["slots_history"]
+    assert report["sim"] is not None and report["sim"]["frames"] > 0
 
     return [{
         "bench": "serve", "mode": "smoke" if smoke else "full",
+        "scenes": n_scenes,
         "streams_served": report["streams_served"],
         "max_concurrent": report["max_concurrent"],
         "frames": report["frames"],
@@ -93,6 +154,10 @@ def run(smoke: bool = False) -> List[dict]:
         "warmup_seconds": report["warmup_seconds"],
         "capacity_history": "->".join(map(str,
                                           report["capacity_history"])),
+        "slots_history": "->".join(map(str, report["slots_history"])),
+        "sim_cycles_per_frame": report["sim"]["cycles_per_frame"],
+        "sim_latency_p50_cycles": report["sim"]["latency_p50_cycles"],
+        "sim_latency_p99_cycles": report["sim"]["latency_p99_cycles"],
         "num_devices": report["num_devices"],
     }]
 
@@ -101,9 +166,12 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="CI configuration: tiny scene, 4 streams, "
-                         "2 buckets")
+                         "2 buckets per axis")
+    ap.add_argument("--scenes", type=int, default=None,
+                    help="serve this many scenes round-robin (default: "
+                         "the mode's preset; full preset is 3)")
     args = ap.parse_args()
-    for row in run(smoke=args.smoke):
+    for row in run(smoke=args.smoke, n_scenes=args.scenes):
         print(",".join(f"{k}={v}" for k, v in row.items()))
     out = SMOKE_ARTIFACT if args.smoke else ARTIFACT
     print(f"# artifact: {os.path.normpath(out)}")

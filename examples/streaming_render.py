@@ -6,10 +6,14 @@ trajectory, stacked per-frame records); prints per-frame quality +
 workload stats, then runs the accelerator simulator over the recorded
 workloads — the full paper pipeline in one script. ``--streams B``
 additionally renders B concurrent staggered camera sessions with one
-vmapped dispatch (the many-users-one-scene serving scenario).
+vmapped dispatch (the many-users serving scenario); ``--scenes K``
+attaches those streams round-robin over K distinct synthetic scenes
+registered in a ``SceneRegistry`` (padded to one bucket, rendered
+through the engine's per-slot scene gather — DESIGN.md §10).
 
   PYTHONPATH=src python examples/streaming_render.py --frames 20
   PYTHONPATH=src python examples/streaming_render.py --streams 4
+  PYTHONPATH=src python examples/streaming_render.py --streams 4 --scenes 3
   PYTHONPATH=src python examples/streaming_render.py --impl pallas_fused
 
 ``--impl`` selects the raster kernel (DESIGN.md §9); ``default`` picks
@@ -39,6 +43,9 @@ def main() -> None:
     ap.add_argument("--gaussians", type=int, default=3000)
     ap.add_argument("--streams", type=int, default=0,
                     help="also render B concurrent staggered streams")
+    ap.add_argument("--scenes", type=int, default=1,
+                    help="attach the streams round-robin over K distinct "
+                         "scenes (implies --streams >= K)")
     from repro.kernels.ops import RASTER_IMPLS, default_impl
     ap.add_argument("--impl", default="default",
                     choices=("default",) + RASTER_IMPLS,
@@ -96,15 +103,44 @@ def main() -> None:
           f"raster utilization {100 * gpu['utilization']:.0f}% -> "
           f"{100 * ls['utilization']:.0f}%")
 
+    if args.scenes > 1:
+        args.streams = max(args.streams, args.scenes)
     if args.streams > 0:
         b = args.streams
-        print(f"\nbatched serving: {b} concurrent streams, one vmapped "
-              f"scan, staggered key frames")
+        k = max(args.scenes, 1)
         offsets = np.linspace(0.0, 0.1, b)
         poses_b = jnp.stack([
             dolly_trajectory(args.frames, start=(float(dx), -0.3, -3.0),
                              target=(0.0, 0.0, 6.0)) for dx in offsets])
-        sres = render_streams(scene, cam, poses_b, cfg)
+        if k > 1:
+            # Multi-scene serving shape: K same-bucket scenes stacked by
+            # a SceneRegistry, streams assigned round-robin, the engine
+            # gathering each slot's scene on device (DESIGN.md §10).
+            from repro.serve import SceneRegistry
+            from repro.serve.scenes import DEFAULT_SCENE_BUCKETS
+            # Extend the bucket ladder past --gaussians so any requested
+            # scene size registers (a scene is never truncated).
+            buckets = list(DEFAULT_SCENE_BUCKETS)
+            while buckets[-1] < args.gaussians:
+                buckets.append(buckets[-1] * 2)
+            registry = SceneRegistry(tuple(buckets))
+            registry.register(scene)
+            for i in range(1, k):
+                registry.register(structured_scene(
+                    jax.random.PRNGKey(100 + i), args.gaussians,
+                    clutter=0.2 + 0.5 * (i % 3) / 2))
+            slot_scene = np.arange(b) % k
+            stacked = registry.stack(list(registry.ids()[:k]), b)
+            bucket = registry.get(registry.ids()[0]).bucket
+            print(f"\nbatched multi-scene serving: {b} streams round-robin "
+                  f"over {k} scenes (bucket {bucket}), one vmapped scan")
+            print(f"slot -> scene: {slot_scene.tolist()}")
+            sres = render_streams(stacked, cam, poses_b, cfg,
+                                  slot_scene=slot_scene)
+        else:
+            print(f"\nbatched serving: {b} concurrent streams, one vmapped "
+                  f"scan, staggered key frames")
+            sres = render_streams(scene, cam, poses_b, cfg)
         sfull = np.asarray(sres.records.is_full)        # (B, F)
         spairs = np.asarray(sres.records.raster_pairs).sum(axis=2)
         print(f"phases: {np.asarray(sres.phases).tolist()}")

@@ -60,7 +60,10 @@ step does not advance, so the key-frame schedule is preserved across
 stalls) plus initial ``carries`` (``init_carry``/``init_stream_carries``
 for fresh streams), and returns the final carries — a continuous batcher
 threads sessions through successive fixed-shape chunks with active
-frames bit-identical to a solo run.
+frames bit-identical to a solo run. Streams need not share a scene:
+with ``slot_scene`` given, the scene argument is a stacked ``(S, N,
+...)`` pytree and each stream gathers its own scene before scanning
+(multi-scene serving, DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -239,6 +242,21 @@ def _scan_streams(scene, cam, poses_batch, counts, phases, carries, cfg):
     return jax.vmap(fn)(poses_batch, counts, phases, carries)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _scan_streams_scenes(scenes, cam, poses_batch, counts, phases, carries,
+                         slot_scene, cfg):
+    """Multi-scene variant: ``scenes`` fields carry a leading stacked
+    scene axis (S, N, ...) and each stream gathers its own scene by
+    ``slot_scene`` before running the identical masked scan — so a
+    stream's math is value-for-value the same as a single-scene run on
+    that scene, and one executable serves any assignment of B streams to
+    the S stacked scenes."""
+    def fn(poses, count, phase, carry, sid):
+        scene = jax.tree_util.tree_map(lambda a: a[sid], scenes)
+        return stream_scan(scene, cam, poses, count, phase, cfg, carry)
+    return jax.vmap(fn)(poses_batch, counts, phases, carries, slot_scene)
+
+
 def render_trajectory(scene, cam: Camera, poses: jax.Array,
                       cfg: RenderConfig, *, keep_states: bool = False,
                       phase: Union[int, jax.Array] = 0
@@ -273,10 +291,13 @@ def render_streams(scene, cam: Camera, poses_batch: jax.Array,
                    cfg: RenderConfig, *,
                    phases: Optional[Union[Sequence[int], jax.Array]] = None,
                    counts: Optional[Union[Sequence[int], jax.Array]] = None,
-                   carries: Optional[EngineCarry] = None
+                   carries: Optional[EngineCarry] = None,
+                   slot_scene: Optional[Union[Sequence[int],
+                                              jax.Array]] = None
                    ) -> StreamsResult:
     """Batched multi-stream rendering: vmap the scanned engine over B
-    concurrent camera sessions sharing one scene.
+    concurrent camera sessions sharing one scene — or, with
+    ``slot_scene``, over B sessions spread across S stacked scenes.
 
     poses_batch: (B, F, 4, 4). Each stream runs the full streaming loop
     independently (own carry, own key-frame schedule); ``phases``
@@ -294,6 +315,17 @@ def render_streams(scene, cam: Camera, poses_batch: jax.Array,
     the final per-stream carries come back in ``StreamsResult.carries``,
     so chunked serving loops (repro.serve.batcher) can thread sessions
     through successive fixed-shape batches.
+
+    ``slot_scene`` (default: None — single shared scene) switches to the
+    multi-scene gather path (the serving layer's scene registry,
+    DESIGN.md §10): ``scene`` must then be a *stacked* scene pytree with
+    fields ``(S, N, ...)`` (e.g. ``serve.scenes.SceneRegistry.stack``)
+    and ``slot_scene`` gives each stream slot its scene index in
+    ``[0, S)``. Masked (count-0) slots should point at index 0 — they
+    trace the render like any slot, so their scene must exist. Because
+    the gather happens before the per-stream scan, an active stream is
+    value-identical to a single-scene ``render_trajectory`` over its own
+    scene (pinned by tests/test_serve_scenes.py).
     """
     b, f = poses_batch.shape[0], poses_batch.shape[1]
     if phases is None:
@@ -304,6 +336,13 @@ def render_streams(scene, cam: Camera, poses_batch: jax.Array,
     counts = jnp.asarray(counts, jnp.int32)
     if carries is None:
         carries = init_stream_carries(cam, poses_batch)
+    if slot_scene is not None:
+        carry_end, (frames, recs, active) = _scan_streams_scenes(
+            scene, cam, poses_batch, counts, phases, carries,
+            jnp.asarray(slot_scene, jnp.int32), cfg)
+        return StreamsResult(frames=frames, records=StackedRecords(recs),
+                             phases=phases, counts=counts,
+                             frame_active=active, carries=carry_end)
     carry_end, (frames, recs, active) = _scan_streams(
         scene, cam, poses_batch, counts, phases, carries, cfg)
     return StreamsResult(frames=frames, records=StackedRecords(recs),

@@ -1,27 +1,35 @@
-"""Streaming serving subsystem (DESIGN.md §8).
+"""Streaming serving subsystem (DESIGN.md §8, §10).
 
-Turns the batch engine (core/engine.py) into a server for churning
-streams: sessions attach/detach with phase-staggered key-frame schedules
-(``session``), a continuous batcher packs active sessions into fixed
-B-slot batches over ``engine.render_streams`` (``batcher``), a bucketed
-executable cache bounds recompilation while a workload-predictive policy
-picks ``rerender_capacity`` (``cache``), stream slots shard across
-devices (``placement``), and ``server`` ties it into the serve loop with
-latency / throughput / utilization metrics.
+Turns the batch engine (core/engine.py) into a multi-scene server for
+churning streams: a scene registry pads scenes to bucketed Gaussian
+counts so same-bucket scenes share executables (``scenes``), sessions
+attach/detach against a scene with phase-staggered key-frame schedules
+(``session``), a scene-aware continuous batcher packs same-scene
+streams into contiguous slot groups of an *elastic* B-slot batch over
+``engine.render_streams`` (``batcher``), a bucketed executable cache
+bounds recompilation while a 2-axis ``(B, R)`` policy picks the batch
+size from queue depth and ``rerender_capacity`` from recorded demand
+(``cache``), stream slots — and their ``slot_scene`` gather indices —
+shard across devices (``placement``), and ``server`` ties it into the
+serve loop with latency / throughput / utilization metrics plus
+optional accelerator-in-the-loop simulated latencies.
 """
 from repro.serve.batcher import ContinuousBatcher, SlotBatch
-from repro.serve.cache import (ExecutableCache, pick_capacity,
-                               snap_capacity, suggest_capacity,
-                               validate_buckets)
+from repro.serve.cache import (BucketPolicy, ExecutableCache, pick_capacity,
+                               snap_capacity, suggest_buckets,
+                               suggest_capacity, validate_buckets)
 from repro.serve.placement import build_render_fn, stream_mesh
+from repro.serve.scenes import (SceneEntry, SceneRegistry, pad_scene,
+                                snap_scene_bucket)
 from repro.serve.server import (PoissonTraffic, ServeConfig, StreamServer,
                                 TrafficConfig)
 from repro.serve.session import SessionManager, StreamSession
 
 __all__ = [
-    "ContinuousBatcher", "ExecutableCache", "PoissonTraffic",
-    "ServeConfig", "SessionManager", "SlotBatch", "StreamServer",
-    "StreamSession", "TrafficConfig", "build_render_fn", "pick_capacity",
-    "snap_capacity", "stream_mesh", "suggest_capacity",
-    "validate_buckets",
+    "BucketPolicy", "ContinuousBatcher", "ExecutableCache",
+    "PoissonTraffic", "SceneEntry", "SceneRegistry", "ServeConfig",
+    "SessionManager", "SlotBatch", "StreamServer", "StreamSession",
+    "TrafficConfig", "build_render_fn", "pad_scene", "pick_capacity",
+    "snap_capacity", "snap_scene_bucket", "stream_mesh", "suggest_buckets",
+    "suggest_capacity", "validate_buckets",
 ]

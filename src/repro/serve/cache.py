@@ -1,21 +1,33 @@
-"""Bucketed-executable cache + workload-predictive ``rerender_capacity``.
+"""Bucketed-executable cache + the 2-axis ``(B, R)`` bucket policy.
 
-Every distinct ``(B, chunk, R, window, impl)`` tuple is a distinct XLA
-executable — ``impl`` (the raster kernel path, DESIGN.md §9) changes the
-lowering just as surely as a shape does — so letting R float with the
-measured workload would compile an unbounded family. Two pieces bound it
-(ROADMAP "workload-predictive R"):
+Every distinct ``(scene_bucket, B, chunk, R, window, impl)`` tuple is a
+distinct XLA executable — ``impl`` (the raster kernel path, DESIGN.md
+§9) changes the lowering just as surely as a shape does — so letting
+the runtime-adapted shapes float with the measured workload would
+compile an unbounded family. Bucketing bounds it, one axis at a time:
 
-- bucketing: R is only ever one of 2-3 fixed values
-  (``ServeConfig.r_buckets``, validated ascending/unique there);
-  ``snap_capacity`` rounds a demand estimate UP to the smallest bucket
-  that covers it (the largest bucket caps runaway demand — overflow
-  tiles then degrade to interpolation, which ``FrameRecord`` counts).
-- ``suggest_capacity``: picks the bucket from *recorded* workload — the
-  ``quantile`` of per-sparse-frame re-render demand
-  (``plan.rerender_demand``: active tiles + overflow_tiles, i.e. what an
-  uncapped plan would have used), so the choice tracks the scene and
-  trajectory actually being served rather than a static config.
+- **R** (``r_buckets``): ``snap_capacity`` rounds a demand estimate UP
+  to the smallest bucket that covers it (the largest bucket caps
+  runaway demand — overflow tiles then degrade to interpolation, which
+  ``FrameRecord`` counts). ``suggest_capacity`` picks the bucket from
+  *recorded* workload — the ``quantile`` of per-sparse-frame re-render
+  demand (``plan.rerender_demand``: active tiles + overflow_tiles, i.e.
+  what an uncapped plan would have used) — so the choice tracks the
+  scenes and trajectories actually being served rather than a static
+  config (ROADMAP "workload-predictive R").
+- **B** (``b_buckets``): the slot-batch size snaps the same way, but is
+  driven by *queue depth* — how many streams currently want service —
+  instead of recorded demand (queue depth is known before the round
+  renders; demand only after). Small queues ride a small batch (less
+  masked-slot waste, lower per-round latency); load spikes snap the
+  batch up (ROADMAP "autoscaling slot counts").
+- **scene N** is bucketed at registration time by ``serve/scenes.py``
+  (padded Gaussian counts), not here — the policy's job is the two
+  axes that adapt *while serving*.
+
+``BucketPolicy`` packages both serving axes; ``suggest_buckets`` is
+``suggest_capacity`` grown to 2-D. The distinct-executable bound for a
+server's lifetime is ``policy.max_keys`` per scene bucket in use.
 
 ``ExecutableCache`` is the bookkeeping layer: one entry per bucket key,
 built lazily, with hit/miss counters the serve benchmark asserts on
@@ -34,6 +46,7 @@ import numpy as np
 from repro.core.plan import rerender_demand
 
 DEFAULT_R_BUCKETS = (8, 16, 32)
+DEFAULT_B_BUCKETS = (2, 4, 8)
 
 
 def validate_buckets(buckets: Sequence[int]) -> None:
@@ -83,6 +96,54 @@ def suggest_capacity(records, quantile: float = 0.9,
     if frame_mask is not None:
         sparse &= np.asarray(frame_mask).reshape(-1)
     return pick_capacity(demand[sparse], quantile, buckets)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """The 2-axis serving shape policy: pick ``(B, R)`` from buckets.
+
+    Frozen and validated at construction so a server can hold one policy
+    for its lifetime; ``max_keys`` is the hard bound on distinct
+    executables the policy can ever request (per scene bucket).
+    """
+
+    b_buckets: Tuple[int, ...] = DEFAULT_B_BUCKETS
+    r_buckets: Tuple[int, ...] = DEFAULT_R_BUCKETS
+    quantile: float = 0.9
+
+    def __post_init__(self):
+        validate_buckets(self.b_buckets)
+        validate_buckets(self.r_buckets)
+        if not 0.0 <= self.quantile <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got "
+                             f"{self.quantile}")
+
+    @property
+    def max_keys(self) -> int:
+        return len(self.b_buckets) * len(self.r_buckets)
+
+    def pick_slots(self, queue_depth: int) -> int:
+        """B bucket covering the streams that currently want service
+        (the largest bucket caps a flood — excess streams wait)."""
+        return snap_capacity(max(int(queue_depth), 1), self.b_buckets)
+
+    def pick_capacity(self, sparse_demands) -> int:
+        """R bucket covering the demand quantile (see pick_capacity)."""
+        return pick_capacity(sparse_demands, self.quantile, self.r_buckets)
+
+    def pick(self, queue_depth: int, sparse_demands) -> Tuple[int, int]:
+        return self.pick_slots(queue_depth), self.pick_capacity(
+            sparse_demands)
+
+
+def suggest_buckets(records, queue_depth: int,
+                    policy: BucketPolicy = BucketPolicy(),
+                    frame_mask=None) -> Tuple[int, int]:
+    """``suggest_capacity`` grown to 2 axes: ``(B, R)`` from the current
+    queue depth plus recorded per-sparse-frame re-render demand."""
+    r = suggest_capacity(records, policy.quantile, policy.r_buckets,
+                         frame_mask)
+    return policy.pick_slots(queue_depth), r
 
 
 @dataclasses.dataclass

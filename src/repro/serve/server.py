@@ -1,58 +1,99 @@
-"""The serve loop: sessions -> batcher -> cached executable -> metrics.
+"""The serve loop: scenes + sessions -> batcher -> cached executable.
 
-One ``StreamServer.step()`` is a serving round: admit waiting streams to
-free slots, pack up to ``chunk`` pending poses per stream into the fixed
-(B, chunk) batch, render it through the executable for the CURRENT
-R bucket (built lazily by the ``ExecutableCache``; sharded across
-devices when ``placement.stream_mesh`` finds a usable mesh), then commit
-carries back and stamp per-frame latencies (enqueue -> round end, wall
-clock).
+One ``StreamServer.step()`` is a serving round: pick the round's *scene
+bucket* (drain the in-flight bucket before switching — all streams in
+one batch must share a padded-N bucket so their scenes stack), resize
+the slot batch to the B bucket covering that bucket's queue depth
+(elastic B — carries live on sessions, so resizes drop nothing), admit
+waiting streams of that bucket to free slots (same-scene streams packed
+into contiguous groups), pack up to ``chunk`` pending poses per stream
+into the (B, chunk) batch, render it through the executable for the
+CURRENT ``(scene_bucket, B, R)`` key (built lazily by the
+``ExecutableCache``; sharded across devices when ``placement.stream_mesh``
+finds a usable mesh), then commit carries back and stamp per-frame
+latencies (enqueue -> round end, wall clock).
 
-Capacity is workload-predictive: the server keeps a rolling history of
-per-frame re-render demand from the rendered ``FrameRecord``s (real,
-non-padding frames only) and every ``adapt_every`` rounds re-picks the
-R bucket via ``cache.suggest_capacity``. Switching buckets changes the
-cache key — with 2-3 buckets the total number of distinct compilations
-stays bounded no matter how long the server runs, which is the point of
-bucketing (asserted in benchmarks/serve_bench.py).
+Scenes come from a ``SceneRegistry`` (serve/scenes.py): pass one with
+scenes pre-registered, or pass a bare ``GaussianScene`` and the server
+registers it as the single default scene (the PR-3 single-scene server
+is exactly this degenerate case). Sessions are keyed by ``scene_id``;
+each round's distinct scenes are stacked ``(B, N_bucket, ...)`` and the
+engine gathers per slot (``slot_scene``), so any mix of same-bucket
+scenes rides ONE executable — the cache key is
+``(scene_bucket, B, chunk, R, window, impl)`` and never names a scene.
+
+Both serving shapes are workload-adaptive through ``cache.BucketPolicy``:
+R re-picks every ``adapt_every`` busy rounds from a rolling history of
+recorded re-render demand, B re-snaps every round from queue depth.
+With 2-3 buckets per axis the distinct compilations stay bounded by
+``policy.max_keys`` per scene bucket no matter how long the server runs
+(asserted in benchmarks/serve_bench.py).
+
+``sim_latency=True`` closes the loop with the paper's accelerator model:
+every rendered frame's ``FrameRecord`` (with its recorded device-LDU
+schedule) is folded into a bounded trace and ``report()`` replays it
+through ``core/streaming.simulate_sequence(policy="recorded")`` — so
+serve_bench.json shows the simulated ASIC cycles next to the wall-clock
+latencies for the very frames this process served.
 
 ``PoissonTraffic`` drives benchmarks and tests: streams arrive per round
 with Poisson counts, each carrying a heterogeneous trajectory
-(dolly/orbit, randomized geometry and length) over the one shared scene.
+(dolly/orbit, randomized geometry and length), round-robined over
+``TrafficConfig.scenes`` scene indices.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
 
 from repro.core.camera import Camera
-from repro.core.pipeline import RenderConfig
+from repro.core.gaussians import GaussianScene
+from repro.core.pipeline import RenderConfig, StackedRecords
+from repro.core.plan import rerender_demand
+from repro.core.streaming import (AcceleratorConfig, FrameWork,
+                                  frameworks_from_stacked,
+                                  simulate_sequence, throughput)
 from repro.scenes.trajectory import dolly_trajectory, orbit_trajectory
 from repro.serve.batcher import ContinuousBatcher
-from repro.core.plan import rerender_demand
-from repro.serve.cache import (ExecutableCache, pick_capacity,
+from repro.serve.cache import (BucketPolicy, ExecutableCache,
                                validate_buckets)
 from repro.serve.placement import build_render_fn, stream_mesh
+from repro.serve.scenes import DEFAULT_SCENE_BUCKETS, SceneRegistry
 from repro.serve.session import SessionManager, StreamSession
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    slots: int = 8              # B: stream slots per batch
+    slots: int = 8              # B: stream slots (static, if b_buckets unset)
     chunk: int = 4              # F: frames per stream per round
     r_buckets: Tuple[int, ...] = (8, 16, 32)
+    # B buckets for the elastic slot batch; None = static B (`slots`).
+    b_buckets: Optional[Tuple[int, ...]] = None
     quantile: float = 0.9       # demand quantile for capacity selection
-    adapt_every: int = 4        # rounds between capacity re-evaluation
+    adapt_every: int = 4        # rounds between R re-evaluation
     history: int = 4096         # demand samples kept for the quantile
     use_sharding: bool = True   # shard slots over devices when possible
+    scene_buckets: Tuple[int, ...] = DEFAULT_SCENE_BUCKETS
+    collect_frames: bool = False  # retain rendered frames on sessions
+    sim_latency: bool = False   # accelerator-in-the-loop metrics
+    sim_keep: int = 4096        # most recent frames kept for the sim
 
     def __post_init__(self):
         validate_buckets(self.r_buckets)
+        if self.b_buckets is not None:
+            validate_buckets(self.b_buckets)
+        validate_buckets(self.scene_buckets)
+
+    @property
+    def slot_buckets(self) -> Tuple[int, ...]:
+        """The B values this server may run (static B = one bucket)."""
+        return self.b_buckets if self.b_buckets is not None \
+            else (self.slots,)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,15 +103,17 @@ class TrafficConfig:
     min_frames: int = 6
     max_frames: int = 16
     seed: int = 0
+    scenes: int = 1             # round-robin arrivals over this many scenes
 
 
 class PoissonTraffic:
-    """Poisson arrivals of heterogeneous trajectories over one scene."""
+    """Poisson arrivals of heterogeneous trajectories over K scenes."""
 
     def __init__(self, cfg: TrafficConfig):
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.remaining = int(cfg.n_streams)
+        self.arrived = 0
 
     @property
     def done(self) -> bool:
@@ -88,32 +131,55 @@ class PoissonTraffic:
             n, radius=self.rng.uniform(5.0, 8.0), target=(0.0, 0.0, 6.0),
             height=self.rng.uniform(-1.0, 0.0)))
 
-    def arrivals(self) -> List[np.ndarray]:
+    def arrivals(self) -> List[Tuple[np.ndarray, int]]:
+        """This round's ``(poses, scene_index)`` arrivals; scene_index
+        round-robins over ``cfg.scenes`` (the server maps it onto its
+        registered scene ids)."""
         if self.done:
             return []
         k = int(min(self.rng.poisson(self.cfg.rate), self.remaining))
         self.remaining -= k
-        return [self._trajectory() for _ in range(k)]
+        out = []
+        for _ in range(k):
+            out.append((self._trajectory(),
+                        self.arrived % max(self.cfg.scenes, 1)))
+            self.arrived += 1
+        return out
 
 
 class StreamServer:
-    """Continuous-batching stream server over one scene (module docstring)."""
+    """Multi-scene continuous-batching stream server (module docstring)."""
 
     TRACE_KEEP = 1024     # most recent per-round dicts kept for report()
     LATENCY_KEEP = 65536  # most recent per-frame latency samples kept
+    STACK_KEEP = 8        # memoized per-round scene stacks
 
-    def __init__(self, scene, cam: Camera, base_cfg: RenderConfig,
+    def __init__(self, scene: Union[GaussianScene, SceneRegistry],
+                 cam: Camera, base_cfg: RenderConfig,
                  scfg: ServeConfig = ServeConfig()):
-        self.scene = scene
+        if isinstance(scene, SceneRegistry):
+            self.registry = scene
+            if not len(self.registry):
+                raise ValueError("SceneRegistry has no scenes registered")
+        else:
+            self.registry = SceneRegistry(scfg.scene_buckets)
+            self.registry.register(scene)
         self.cam = cam
         self.base_cfg = base_cfg
         self.scfg = scfg
+        self.policy = BucketPolicy(b_buckets=scfg.slot_buckets,
+                                   r_buckets=scfg.r_buckets,
+                                   quantile=scfg.quantile)
         self.manager = SessionManager(base_cfg.window)
-        self.batcher = ContinuousBatcher(scfg.slots, scfg.chunk, cam)
+        self._meshes: Dict[int, object] = {}
+        b0 = scfg.slot_buckets[0]
+        self.batcher = ContinuousBatcher(
+            b0, scfg.chunk, cam, group=self._group_for(b0),
+            collect_frames=scfg.collect_frames)
         self.cache = ExecutableCache()
-        self.mesh = stream_mesh(scfg.slots) if scfg.use_sharding else None
         self.capacity = int(scfg.r_buckets[0])
         self.capacity_history: List[int] = [self.capacity]
+        self.slots_history: List[int] = [b0]
         self.streams_seen = 0
         self.streams_finished = 0
         # Bounded recent-latency reservoir: exact counters above stay
@@ -124,6 +190,7 @@ class StreamServer:
         self.rounds = 0
         self.busy_rounds = 0
         self.active_slot_frames = 0
+        self.capacity_frames = 0       # sum of B*chunk over busy rounds
         self.render_seconds = 0.0
         self.warmup_seconds = 0.0
         self.max_concurrent = 0
@@ -131,53 +198,171 @@ class StreamServer:
         # Rolling per-sparse-frame demand samples (flat ints — all the
         # capacity picker needs), newest last.
         self._demand: Deque[int] = deque(maxlen=scfg.history)
+        # Accelerator-in-the-loop trace: per-round device-side records
+        # in service order (host conversion is deferred to report() so
+        # the serving rounds never pay record transfers), bounded like
+        # the latency reservoir.
+        self._sim_rounds: Deque[tuple] = deque(
+            maxlen=max(1, scfg.sim_keep // max(scfg.chunk, 1)))
+        self._sim_dropped = 0
+        self._stacks: Dict[tuple, object] = {}
+
+    # -- scenes ------------------------------------------------------------
+    @property
+    def default_scene_id(self) -> int:
+        return self.registry.ids()[0]
+
+    def register_scene(self, scene: GaussianScene):
+        """Admit a new scene mid-serving; invalidates memoized stacks."""
+        entry = self.registry.register(scene, now=self.clock())
+        self._stacks.clear()
+        return entry
+
+    def evict_scene(self, scene_id: int):
+        """Evict a drained scene (raises while streams are attached)."""
+        entry = self.registry.evict(scene_id)
+        self._stacks.clear()
+        return entry
+
+    def scene_for_index(self, idx: int) -> int:
+        """Traffic scene index -> registered scene id (round-robin)."""
+        ids = self.registry.ids()
+        return ids[idx % len(ids)]
 
     # -- lifecycle ---------------------------------------------------------
     def clock(self) -> float:
         return time.perf_counter()
 
-    def attach(self, poses, now: Optional[float] = None) -> StreamSession:
+    def attach(self, poses, now: Optional[float] = None,
+               scene_id: Optional[int] = None) -> StreamSession:
+        sid = self.default_scene_id if scene_id is None else scene_id
+        self.registry.get(sid)         # raises on unknown scene
         sess = self.manager.attach(
-            poses, now=self.clock() if now is None else now)
+            poses, now=self.clock() if now is None else now, scene_id=sid)
+        self.registry.acquire(sid)     # pin only once the attach stuck
         self.streams_seen += 1
         return sess
 
+    def detach(self, sid: int) -> StreamSession:
+        """Cancel a stream mid-flight: remove its session AND release its
+        scene pin. Server-attached streams must be cancelled here, not
+        via ``manager.detach`` directly — the manager knows nothing of
+        the registry, so a direct detach would leave ``entry.refs``
+        pinned forever and block ``evict_scene``. (The batcher reclaims
+        the cancelled stream's slot on the next round.)"""
+        sess = self.manager.detach(sid)
+        self.registry.release(sess.scene_id)
+        return sess
+
     # -- executable selection ----------------------------------------------
-    def _key_for(self, r: int):
-        # impl is part of the key: a kernel-path change (e.g. pallas_fused
-        # vs jnp_chunked) is a distinct XLA executable, and a server
-        # reconfigured across backends must not serve a stale cache entry.
-        return (self.scfg.slots, self.scfg.chunk, int(r),
+    def _key_for(self, bucket, b: int, r: int):
+        # scene_bucket is the (padded N, sh K) shape signature; impl is
+        # the raster kernel path (DESIGN.md §9) — both change the
+        # lowering, and a server serving many scenes or reconfigured
+        # across backends must never reuse a stale executable.
+        return (bucket, int(b), self.scfg.chunk, int(r),
                 self.base_cfg.window, self.base_cfg.impl)
 
-    def _build_for(self, r: int):
-        cfg = dataclasses.replace(self.base_cfg, rerender_capacity=int(r))
-        return build_render_fn(self.cam, cfg, self.mesh)
+    def _mesh_for(self, b: int):
+        if not self.scfg.use_sharding:
+            return None
+        if b not in self._meshes:
+            self._meshes[b] = stream_mesh(b)
+        return self._meshes[b]
 
-    def _executable(self):
-        r = self.capacity
-        return self.cache.get(self._key_for(r), lambda: self._build_for(r))
+    def _group_for(self, b: int) -> int:
+        mesh = self._mesh_for(b)
+        return b // int(mesh.size) if mesh is not None else b
+
+    def _build_for(self, b: int, r: int):
+        cfg = dataclasses.replace(self.base_cfg, rerender_capacity=int(r))
+        return build_render_fn(self.cam, cfg, self._mesh_for(b),
+                               multi_scene=True)
+
+    def _executable(self, bucket):
+        b, r = self.batcher.slots, self.capacity
+        return self.cache.get(self._key_for(bucket, b, r),
+                              lambda: self._build_for(b, r))
+
+    def _stack_for(self, scene_ids: Tuple[Optional[int], ...],
+                   bucket, size: int):
+        """Round's stacked (size, N_bucket, ...) scenes, memoized while
+        the bound scene set is stable across rounds."""
+        ids = tuple(self.default_scene_id if i is None else i
+                    for i in scene_ids)
+        if not ids:
+            ids = (self.registry.by_bucket(bucket)[0],)
+        key = (ids, int(size))
+        if key not in self._stacks:
+            if len(self._stacks) >= self.STACK_KEEP:
+                self._stacks.pop(next(iter(self._stacks)))
+            self._stacks[key] = self.registry.stack(ids, size)
+        return self._stacks[key]
 
     def warmup(self) -> float:
-        """Compile every bucket's executable before taking traffic.
+        """Compile every (scene_bucket, B, R) executable before traffic.
 
-        Runs each bucket once on an all-masked (count-0) batch so jit
-        compile cost lands here instead of inside the first serving
+        Runs each combination once on an all-masked (count-0) batch so
+        jit compile cost lands here instead of inside the first serving
         rounds' latencies. Returns wall seconds spent. Optional — an
-        unwarmed server lazily compiles (at most) one executable per
-        bucket on first use, it just bills that to the unlucky round.
-        Safe mid-serving: the warmup batch is synthesized from scratch
+        unwarmed server lazily compiles (at most) one executable per key
+        on first use, it just bills that to the unlucky round. Safe
+        mid-serving: the warmup batch is synthesized from scratch
         (``empty_batch``), never popping bound sessions' poses.
         """
         t0 = self.clock()
-        batch = self.batcher.empty_batch()
-        for r in self.scfg.r_buckets:
-            fn = self.cache.get(self._key_for(r),
-                                lambda r=r: self._build_for(r))
-            jax.block_until_ready(fn(self.scene, batch.poses, batch.counts,
-                                     batch.phases, batch.carries).frames)
+        for bucket in self.registry.buckets_in_use():
+            scenes_one = (self.registry.by_bucket(bucket)[0],)
+            for b in self.policy.b_buckets:
+                batch = self.batcher.empty_batch(slots=b)
+                scenes = self._stack_for(scenes_one, bucket, b)
+                for r in self.policy.r_buckets:
+                    fn = self.cache.get(
+                        self._key_for(bucket, b, r),
+                        lambda b=b, r=r: self._build_for(b, r))
+                    jax.block_until_ready(fn(
+                        scenes, batch.poses, batch.counts, batch.phases,
+                        batch.carries, batch.slot_scene).frames)
         self.warmup_seconds = self.clock() - t0
         return self.warmup_seconds
+
+    # -- adaptive shapes ---------------------------------------------------
+    def _bucket_of(self, sess: StreamSession) -> Tuple[int, int]:
+        sid = self.default_scene_id if sess.scene_id is None \
+            else sess.scene_id
+        return self.registry.bucket_of(sid)
+
+    def _round_bucket(self) -> Optional[Tuple[int, int]]:
+        """The scene bucket this round serves: the in-flight bucket while
+        any session is bound (a batch can only stack same-bucket
+        scenes), else the oldest waiting session's bucket. None = no
+        work anywhere."""
+        for sid in self.batcher.bound_sids():
+            sess = self.manager.sessions.get(sid)
+            if sess is not None:
+                return self._bucket_of(sess)
+        waiting = self.manager.waiting()
+        if waiting:
+            return self._bucket_of(waiting[0])
+        return None
+
+    def _queue_depth(self, bucket) -> int:
+        """Streams of this bucket that currently want service: bound, or
+        waiting with pending poses."""
+        return sum(1 for s in self.manager.sessions.values()
+                   if (s.slot is not None or s.pending)
+                   and self._bucket_of(s) == bucket)
+
+    def _maybe_resize(self, bucket) -> None:
+        """Snap B to the bucket covering queue depth (elastic B). The
+        batcher resize unbinds overflow sessions on shrink — carries
+        stay on the sessions, so the resize drops nothing."""
+        if self.scfg.b_buckets is None:
+            return
+        b = self.policy.pick_slots(self._queue_depth(bucket))
+        if b != self.batcher.slots:
+            self.batcher.resize(b, self.manager, group=self._group_for(b))
+            self.slots_history.append(b)
 
     def _observe(self, result) -> None:
         """Fold the round's records into the demand history; re-pick R.
@@ -196,31 +381,103 @@ class StreamServer:
                 recs.active, recs.overflow_tiles)).reshape(-1)
             self._demand.extend(demand[sparse].tolist())
         if self._demand and self.busy_rounds % self.scfg.adapt_every == 0:
-            new_cap = pick_capacity(list(self._demand), self.scfg.quantile,
-                                    self.scfg.r_buckets)
+            new_cap = self.policy.pick_capacity(list(self._demand))
             if new_cap != self.capacity:
                 self.capacity = new_cap
                 self.capacity_history.append(new_cap)
 
+    # -- accelerator-in-the-loop -------------------------------------------
+    def _record_sim(self, batch, result) -> None:
+        """Stash the round's stacked records (device references — ONE
+        deque append, no host transfer on the serving path; the
+        FrameWork conversion is deferred to ``_sim_report`` so recording
+        never inflates the wall-clock latencies being measured)."""
+        counts = np.asarray(batch.counts)
+        active = tuple(s is not None and counts[i] > 0
+                       for i, s in enumerate(batch.sids))
+        if self._sim_rounds.maxlen and \
+                len(self._sim_rounds) == self._sim_rounds.maxlen:
+            _, old_counts, old_active = self._sim_rounds[0]
+            self._sim_dropped += int(sum(
+                c for c, a in zip(old_counts, old_active) if a))
+        self._sim_rounds.append((result.records.stacked, counts, active))
+
+    def _sim_frameworks(self) -> List[FrameWork]:
+        """Host-convert the stashed rounds into per-frame FrameWorks,
+        service order (round-major, slot order within a round)."""
+        frames: List[FrameWork] = []
+        n_px = self.cam.height * self.cam.width
+        for stacked, counts, active in self._sim_rounds:
+            for i, on in enumerate(active):
+                if not on:
+                    continue
+                recs = jax.tree_util.tree_map(lambda a, i=i: a[i], stacked)
+                frames.extend(frameworks_from_stacked(
+                    StackedRecords(recs), self.cam.tiles_x,
+                    self.cam.tiles_y, n_px)[:counts[i]])
+        # The round deque bounds memory; this bounds the sim itself.
+        return frames[-self.scfg.sim_keep:]
+
+    def _sim_report(self) -> Optional[dict]:
+        """Replay the served frames through the accelerator model —
+        simulated ASIC cycles for the exact schedules the jitted engine
+        recorded (policy="recorded", streaming pipeline on)."""
+        frames = self._sim_frameworks()
+        if not frames:
+            return None
+        acfg = AcceleratorConfig(num_blocks=self.base_cfg.ldu_blocks)
+        timings = simulate_sequence(frames, acfg, policy="recorded",
+                                    streaming=True)
+        agg = throughput(timings, acfg.num_blocks)
+        # Per-frame service latency in the streaming pipeline: the gap
+        # this frame adds to the completion front (frame_end is
+        # monotone; overlapped frames add less than their span).
+        ends = np.asarray([t.frame_end for t in timings])
+        service = np.diff(ends, prepend=0.0)
+        return {
+            "frames": len(frames),
+            "frames_dropped": self._sim_dropped,
+            "cycles_per_frame": round(float(agg["cycles_per_frame"]), 1),
+            "utilization": round(float(agg["utilization"]), 4),
+            "sort_stall_cycles": round(float(agg["sort_stall"]), 1),
+            "latency_p50_cycles": round(float(np.percentile(service, 50)),
+                                        1),
+            "latency_p99_cycles": round(float(np.percentile(service, 99)),
+                                        1),
+        }
+
     # -- the serving round -------------------------------------------------
     def step(self) -> dict:
         self.rounds += 1
-        self.batcher.admit(self.manager)
+        bucket = self._round_bucket()
+        if bucket is None:
+            info = {"round": self.rounds, "frames": 0, "bound_slots": 0,
+                    "slots": self.batcher.slots, "capacity": self.capacity}
+            self.trace.append(info)
+            return info
+        self._maybe_resize(bucket)
+        self.batcher.admit(self.manager,
+                           allowed=set(self.registry.by_bucket(bucket)))
         self.max_concurrent = max(self.max_concurrent, self.batcher.bound)
         batch = self.batcher.build(self.manager)
         if batch.active_frames == 0:
             info = {"round": self.rounds, "frames": 0,
                     "bound_slots": self.batcher.bound,
+                    "slots": self.batcher.slots,
                     "capacity": self.capacity}
             self.trace.append(info)
             return info
-        fn = self._executable()
+        scenes = self._stack_for(batch.scene_ids, bucket,
+                                 self.batcher.slots)
+        fn = self._executable(bucket)
         t0 = self.clock()
-        result = fn(self.scene, batch.poses, batch.counts, batch.phases,
-                    batch.carries)
+        result = fn(scenes, batch.poses, batch.counts, batch.phases,
+                    batch.carries, batch.slot_scene)
         jax.block_until_ready((result.frames, result.carries))
         t1 = self.clock()
         detached = self.batcher.commit(batch, result, self.manager, t1)
+        for sess in detached:
+            self.registry.release(sess.scene_id)
         self.streams_finished += len(detached)
         counts = np.asarray(batch.counts)
         for i in range(len(batch.sids)):
@@ -228,10 +485,16 @@ class StreamServer:
                 t1 - t for t in batch.enq_times[i][:counts[i]])
         self.busy_rounds += 1          # before _observe: its adapt cadence
         self._observe(result)          # counts busy rounds
+        if self.scfg.sim_latency:
+            self._record_sim(batch, result)
         self.active_slot_frames += batch.active_frames
+        self.capacity_frames += self.batcher.slots * self.scfg.chunk
         self.render_seconds += t1 - t0
         info = {"round": self.rounds, "frames": batch.active_frames,
                 "bound_slots": sum(s is not None for s in batch.sids),
+                "slots": self.batcher.slots,
+                "scene_bucket": bucket,
+                "scene_ids": [i for i in batch.scene_ids if i is not None],
                 "capacity": self.capacity,
                 "render_seconds": round(t1 - t0, 4),
                 "detached": len(detached)}
@@ -243,8 +506,9 @@ class StreamServer:
         """Serve until traffic is drained (or ``max_rounds``); report."""
         while self.rounds < max_rounds:
             if traffic is not None:
-                for poses in traffic.arrivals():
-                    self.attach(poses)
+                for poses, scene_idx in traffic.arrivals():
+                    self.attach(poses,
+                                scene_id=self.scene_for_index(scene_idx))
             if (traffic is None or traffic.done) and not self.manager.sessions:
                 break
             self.step()
@@ -254,7 +518,7 @@ class StreamServer:
     def report(self) -> dict:
         lat = np.asarray(self._latencies)
         frames = int(self.active_slot_frames)
-        cap_frames = self.busy_rounds * self.scfg.slots * self.scfg.chunk
+        meshes = [m for m in self._meshes.values() if m is not None]
         return {
             "streams_served": self.streams_seen,
             "streams_finished": self.streams_finished,
@@ -268,15 +532,18 @@ class StreamServer:
             if lat.size else None,
             "frames_per_second": round(frames / self.render_seconds, 2)
             if self.render_seconds > 0 else None,
-            "slot_utilization": round(self.active_slot_frames / cap_frames,
-                                      4) if cap_frames else 0.0,
+            "slot_utilization": round(frames / self.capacity_frames, 4)
+            if self.capacity_frames else 0.0,
             "capacity": self.capacity,
             "capacity_history": list(self.capacity_history),
+            "slots": self.batcher.slots,
+            "slots_history": list(self.slots_history),
+            "scenes": self.registry.stats(),
+            "sim": self._sim_report(),
             "warmup_seconds": round(self.warmup_seconds, 3),
             "rounds_trace": list(self.trace),
             "cache_log": [{"event": ev, "key": list(map(str, key))}
                           for ev, key in self.cache.log],
-            "num_devices": int(self.mesh.size) if self.mesh is not None
-            else 1,
+            "num_devices": max((int(m.size) for m in meshes), default=1),
             "cache": self.cache.stats(),
         }

@@ -1,9 +1,11 @@
 """Stream sessions: attach/detach lifecycle and key-frame phase assignment.
 
-A ``StreamSession`` is one camera stream against the shared scene: a
-queue of pending poses (with enqueue timestamps for latency accounting),
-the engine carry that resumes it mid-trajectory, and the key-frame
-``phase`` that decides which steps re-render fully.
+A ``StreamSession`` is one camera stream against one scene: a queue of
+pending poses (with enqueue timestamps for latency accounting), the
+engine carry that resumes it mid-trajectory, the ``scene_id`` keying it
+to a registry entry (``serve/scenes.py`` — None means the server's
+default scene), and the key-frame ``phase`` that decides which steps
+re-render fully.
 
 Phase assignment is the churn-safe version of ``engine.stream_phases``:
 that helper staggers a *static* batch evenly over ``[0, window)``; here
@@ -35,9 +37,14 @@ class StreamSession:
     phase: int
     pending: Deque[Tuple[np.ndarray, float]]  # (pose (4,4), enqueue time)
     attached_at: float
+    scene_id: Optional[int] = None        # registry key (None = default)
     carry: Optional[EngineCarry] = None   # None until the first chunk
     slot: Optional[int] = None            # batcher slot, None = waiting
     frames_rendered: int = 0
+    # Rendered chunks, newest last — only populated when the batcher was
+    # built with collect_frames=True (parity tests, demos); a production
+    # server leaves this off so memory stays flat.
+    frames: List[np.ndarray] = dataclasses.field(default_factory=list)
     # Recent per-frame latencies (bounded: a live stream never detaches,
     # so an unbounded list would grow for the life of the server).
     latencies: Deque[float] = dataclasses.field(
@@ -73,19 +80,24 @@ class SessionManager:
         return int(np.argmin(self._phase_load))
 
     def attach(self, poses=None, *, now: float = 0.0,
-               closed: bool = True) -> StreamSession:
+               closed: bool = True,
+               scene_id: Optional[int] = None) -> StreamSession:
         """Register a stream; optionally seed its pose queue.
 
         ``closed=True`` (the default) marks the trajectory complete at
         attach time — the session auto-detaches once drained. Pass
         ``closed=False`` for live streams that keep ``submit``-ing.
+        ``scene_id`` keys the stream to a registry scene (None: the
+        server substitutes its default scene). Phase assignment stays
+        scene-agnostic on purpose — the stagger balances *device* load
+        and the device is shared across scenes.
         """
         sid = self._next_sid
         self._next_sid += 1
         phase = self._assign_phase()
         self._phase_load[phase] += 1
         sess = StreamSession(sid=sid, phase=phase, pending=deque(),
-                             attached_at=now)
+                             attached_at=now, scene_id=scene_id)
         if poses is not None:
             sess.submit(poses, now)
         if closed and not sess.pending:
@@ -106,6 +118,11 @@ class SessionManager:
         """Sessions with work but no batcher slot, oldest first."""
         return [s for s in self.sessions.values()
                 if s.slot is None and s.pending]
+
+    def by_scene(self, scene_id: Optional[int]) -> List[StreamSession]:
+        """Live sessions keyed to ``scene_id``, attach order."""
+        return [s for s in self.sessions.values()
+                if s.scene_id == scene_id]
 
     def __len__(self) -> int:
         return len(self.sessions)

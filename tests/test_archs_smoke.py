@@ -19,14 +19,9 @@ ARCHS = list(ARCH_IDS)
 
 
 def _batch(cfg, b=2, s=32):
-    d = {"tokens": jnp.arange(b * s, dtype=jnp.int32).reshape(b, s)
-         % cfg.vocab_size,
-         "labels": jnp.ones((b, s), jnp.int32)}
-    if cfg.family == "encdec":
-        d["frames"] = jnp.ones((b, cfg.encoder_seq, cfg.d_model)) * 0.1
-    if cfg.family == "vlm":
-        d["vision"] = jnp.ones((b, cfg.num_vision_tokens, cfg.d_model)) * 0.1
-    return d
+    return {"tokens": jnp.arange(b * s, dtype=jnp.int32).reshape(b, s)
+            % cfg.vocab_size,
+            "labels": jnp.ones((b, s), jnp.int32)}
 
 
 @pytest.mark.parametrize("arch", ARCHS)
@@ -61,9 +56,7 @@ def test_one_train_step(arch):
 def test_decode_step_shapes(arch):
     cfg = get_config(arch).reduced()
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    enc = jnp.ones((2, cfg.encoder_seq, cfg.d_model)) * 0.1 \
-        if cfg.family == "encdec" else None
-    cache = M.init_cache(cfg, 2, 48, enc_out=enc)
+    cache = M.init_cache(cfg, 2, 48)
     toks = jnp.ones((2, 1), jnp.int32)
     logits, c2 = M.decode_step(params, toks, cache, cfg)
     assert logits.shape == (2, 1, cfg.vocab_size)
@@ -77,7 +70,7 @@ def test_decode_step_shapes(arch):
 
 @pytest.mark.parametrize("arch", [a for a in ARCHS
                                   if get_config(a).family in
-                                  ("dense", "moe", "vlm")])
+                                  ("dense", "moe")])
 def test_prefill_decode_consistency(arch):
     """Token t+1 logits from decode-with-cache == from full forward."""
     cfg = get_config(arch).reduced()
@@ -86,21 +79,14 @@ def test_prefill_decode_consistency(arch):
     toks = (jnp.arange(b * s, dtype=jnp.int32).reshape(b, s) * 7)  \
         % cfg.vocab_size
     batch = {"tokens": toks}
-    if cfg.family == "vlm":
-        batch["vision"] = jnp.ones((b, cfg.num_vision_tokens,
-                                    cfg.d_model)) * 0.1
     # full forward over s tokens
     logits_full, _, cache = M.forward(params, batch, cfg, build_cache=True)
     # decode token s given cache of first s-1: rebuild cache on s-1 prefix
     batch_prefix = dict(batch, tokens=toks[:, :-1])
     _, _, cache_p = M.forward(params, batch_prefix, cfg, build_cache=True)
-    if cfg.family == "vlm":
-        offset = cfg.num_vision_tokens
-    else:
-        offset = 0
-    # pad cache seq dim to s + offset
+    # pad cache seq dim to s
     from repro.train.serve_step import _pad_cache_seq
-    cache_p = _pad_cache_seq(cache_p, s + offset)
+    cache_p = _pad_cache_seq(cache_p, s)
     logits_dec, _ = M.decode_step(params, toks[:, -1:], cache_p, cfg)
     np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
                                np.asarray(logits_full[:, -1]),
@@ -109,14 +95,11 @@ def test_prefill_decode_consistency(arch):
 
 def test_param_counts_match_targets():
     """Analytic parameter counts are in the right ballpark of the names."""
-    targets = {"yi-9b": 8.8e9, "deepseek-67b": 67e9, "starcoder2-7b": 7.2e9,
-               "minicpm3-4b": 4.1e9, "whisper-large-v3": 1.5e9,
-               "zamba2-7b": 7.2e9, "mamba2-780m": 0.78e9,
-               "internvl2-2b": 1.9e9}
+    targets = {"yi-9b": 8.8e9, "starcoder2-7b": 7.2e9,
+               "minicpm3-4b": 4.1e9}
     for arch, target in targets.items():
         n = get_config(arch).param_count()
         assert 0.55 * target < n < 1.6 * target, (arch, n, target)
     # MoE: active << total
-    for arch in ("moonshot-v1-16b-a3b", "llama4-maverick-400b-a17b"):
-        cfg = get_config(arch)
-        assert cfg.active_param_count() < 0.45 * cfg.param_count()
+    cfg = get_config("moonshot-v1-16b-a3b")
+    assert cfg.active_param_count() < 0.45 * cfg.param_count()
