@@ -18,6 +18,18 @@ per-round trace) and returns summary rows for ``benchmarks/run.py``.
 ``--smoke`` is the CI tier-1 configuration: tiny scene, 4 streams over
 a (2, 4)-bucketed batch; CI runs it with ``--scenes 3`` so three
 same-bucket scenes exercise the shared-executable path end to end.
+
+``--replay {skewed,burst}`` switches to the traffic-replay fairness
+comparison (DESIGN.md §11): the same deterministic arrival trace —
+10:1 scene-bucket skew, or quiet rounds punctuated by bursts — served
+twice, once under the legacy drain-before-switch planner
+(``AdmissionConfig(mode="drain")``, the starvation baseline) and once
+under mixed rounds with aging. The artifact
+(``serve_bench_replay.json``) carries both full reports plus a
+before/after comparison block; the skewed run asserts the headline
+result: under drain the minority bucket's max wait grows with the
+majority backlog, under mixed+aging it stays within
+``max_wait_rounds``.
 """
 from __future__ import annotations
 
@@ -31,9 +43,10 @@ import jax
 
 from benchmarks.common import camera, scenes
 from repro.core.pipeline import RenderConfig
-from repro.scenes.synthetic import structured_scene
-from repro.serve import (PoissonTraffic, SceneRegistry, ServeConfig,
-                         StreamServer, TrafficConfig)
+from repro.scenes.synthetic import random_blob_scene, structured_scene
+from repro.serve import (AdmissionConfig, PoissonTraffic, ReplayTraffic,
+                         SceneRegistry, ServeConfig, StreamServer,
+                         TrafficConfig, burst_trace, skewed_trace)
 
 _ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "artifacts")
@@ -41,6 +54,9 @@ ARTIFACT = os.path.join(_ARTIFACTS, "serve_bench.json")
 # The CI smoke run writes its own file so a local `--smoke` never
 # clobbers the committed full-run artifact.
 SMOKE_ARTIFACT = os.path.join(_ARTIFACTS, "serve_bench_smoke.json")
+REPLAY_ARTIFACT = os.path.join(_ARTIFACTS, "serve_bench_replay.json")
+REPLAY_SMOKE_ARTIFACT = os.path.join(_ARTIFACTS,
+                                     "serve_bench_replay_smoke.json")
 
 FULL = dict(
     image=64, n_gaussians=3000, window=4, warmup=True, scenes=3,
@@ -56,6 +72,34 @@ SMOKE = dict(
     scene="indoor",
     traffic=TrafficConfig(n_streams=4, rate=8.0, min_frames=6,
                           max_frames=8, seed=0),
+)
+
+# The replay comparison serves TWO scenes in DIFFERENT buckets — a
+# structured majority scene and a degree-0 blob minority scene — so the
+# drain-mode baseline genuinely starves the minority (same-bucket
+# scenes would share rounds regardless of planner). ``aging`` is the
+# mixed-mode AdmissionConfig under test; ``max_groups_per_round=1`` is
+# the worst case for fairness (one bucket per round, so only aging can
+# let the minority in).
+REPLAY_FULL = dict(
+    image=64, n_major=1500, n_minor=400, window=4,
+    scfg=ServeConfig(chunk=3, r_buckets=(4, 8, 16), b_buckets=(2, 4, 8),
+                     quantile=0.9, adapt_every=2,
+                     scene_buckets=(512, 1024, 2048)),
+    traffic=TrafficConfig(n_streams=22, min_frames=8, max_frames=12,
+                          seed=0),
+    skew=10, burst_every=3, burst_size=6,
+    aging=AdmissionConfig(max_wait_rounds=2, max_groups_per_round=1),
+)
+REPLAY_SMOKE = dict(
+    image=48, n_major=260, n_minor=90, window=4,
+    scfg=ServeConfig(chunk=2, r_buckets=(4, 8), b_buckets=(2, 4),
+                     quantile=0.9, adapt_every=2,
+                     scene_buckets=(256, 512)),
+    traffic=TrafficConfig(n_streams=11, min_frames=6, max_frames=8,
+                          seed=0),
+    skew=10, burst_every=3, burst_size=4,
+    aging=AdmissionConfig(max_wait_rounds=2, max_groups_per_round=1),
 )
 
 
@@ -158,8 +202,106 @@ def run(smoke: bool = False, n_scenes: Optional[int] = None) -> List[dict]:
         "sim_cycles_per_frame": report["sim"]["cycles_per_frame"],
         "sim_latency_p50_cycles": report["sim"]["latency_p50_cycles"],
         "sim_latency_p99_cycles": report["sim"]["latency_p99_cycles"],
+        "jain_service": report["fairness"]["jain_service"],
+        "max_wait_rounds": report["fairness"]["max_wait_rounds"],
+        "deferred": report["fairness"]["deferred"],
         "num_devices": report["num_devices"],
     }]
+
+
+def _replay_serve(setup: dict, pattern: str,
+                  admission: AdmissionConfig) -> dict:
+    """One leg of the before/after comparison: the deterministic trace
+    (scene index 0 = majority bucket, 1 = minority bucket) served under
+    ``admission``. Fresh server + traffic per leg, identical seeds —
+    the ONLY difference between legs is the round planner."""
+    cam = camera(setup["image"], setup["image"])
+    registry = SceneRegistry(setup["scfg"].scene_buckets)
+    registry.register(structured_scene(jax.random.PRNGKey(21),
+                                       setup["n_major"], clutter=0.4))
+    registry.register(random_blob_scene(jax.random.PRNGKey(22),
+                                        setup["n_minor"]))
+    cfg = RenderConfig(window=setup["window"], capacity=256)
+    scfg = dataclasses.replace(setup["scfg"], admission=admission)
+    server = StreamServer(registry, cam, cfg, scfg)
+    n = setup["traffic"].n_streams
+    if pattern == "skewed":
+        trace = skewed_trace(n, skew=setup["skew"])
+    else:
+        trace = burst_trace(n, burst_every=setup["burst_every"],
+                            burst_size=setup["burst_size"], scenes=2)
+    return server.run(ReplayTraffic(trace, setup["traffic"]),
+                      max_rounds=400)
+
+
+def run_replay(smoke: bool = False, pattern: str = "skewed") -> List[dict]:
+    """The starvation before/after: drain-mode baseline vs mixed rounds
+    with aging, same trace. Writes ``serve_bench_replay.json`` and
+    asserts the fix's contract (see module docstring)."""
+    if pattern not in ("skewed", "burst"):
+        raise ValueError(f"pattern must be 'skewed' or 'burst', "
+                         f"got {pattern!r}")
+    setup = REPLAY_SMOKE if smoke else REPLAY_FULL
+    aging = setup["aging"]
+    before = _replay_serve(setup, pattern, AdmissionConfig(mode="drain"))
+    after = _replay_serve(setup, pattern, aging)
+
+    minority = str(tuple(after["scenes"]["per_scene"]["1"]["bucket"]))
+    rows = []
+    for leg, report in (("drain", before), ("mixed", after)):
+        mb = report["per_bucket"].get(minority, {})
+        rows.append({
+            "bench": "serve_replay", "pattern": pattern, "planner": leg,
+            "mode": "smoke" if smoke else "full",
+            "streams_finished": report["streams_finished"],
+            "frames": report["frames"],
+            "rounds": report["rounds"],
+            "jain_service": report["fairness"]["jain_service"],
+            "max_wait_rounds": report["fairness"]["max_wait_rounds"],
+            "deferred": report["fairness"]["deferred"],
+            "minority_frames": mb.get("frames", 0),
+            "minority_max_wait": mb.get("max_wait_rounds", 0),
+            "minority_share": mb.get("share"),
+            "minority_p99_ms": mb.get("latency_p99_ms"),
+            "latency_p99_ms": report["latency_p99_ms"],
+        })
+    comparison = {
+        "pattern": pattern, "minority_bucket": minority,
+        "max_wait_bound": aging.max_wait_rounds,
+        "minority_max_wait_before": rows[0]["minority_max_wait"],
+        "minority_max_wait_after": rows[1]["minority_max_wait"],
+        "jain_before": rows[0]["jain_service"],
+        "jain_after": rows[1]["jain_service"],
+        "minority_p99_ms_before": rows[0]["minority_p99_ms"],
+        "minority_p99_ms_after": rows[1]["minority_p99_ms"],
+    }
+    out = REPLAY_SMOKE_ARTIFACT if smoke else REPLAY_ARTIFACT
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"comparison": comparison, "before": before,
+                   "after": after}, f, indent=1)
+
+    n = setup["traffic"].n_streams
+    scfg = setup["scfg"]
+    for report in (before, after):
+        # both planners eventually serve everyone (drain starves, it
+        # does not drop) and stay within the compile bound
+        assert report["streams_finished"] == n, report["streams_finished"]
+        buckets_in_use = len(report["scenes"]["buckets_in_use"])
+        max_keys = len(scfg.slot_buckets) * len(scfg.r_buckets) \
+            * buckets_in_use
+        assert report["cache"]["distinct_executables"] <= max_keys
+    # the headline: minority service is nonzero and its wait is bounded
+    # by max_wait_rounds under mixed+aging
+    assert rows[1]["minority_frames"] > 0, rows[1]
+    assert rows[1]["minority_max_wait"] <= aging.max_wait_rounds, rows[1]
+    if pattern == "skewed":
+        # ... while the drain baseline demonstrably starved it
+        assert rows[0]["minority_max_wait"] > aging.max_wait_rounds, \
+            rows[0]
+        assert rows[1]["jain_service"] >= rows[0]["jain_service"], \
+            (rows[0], rows[1])
+    return rows
 
 
 def main() -> None:
@@ -170,10 +312,18 @@ def main() -> None:
     ap.add_argument("--scenes", type=int, default=None,
                     help="serve this many scenes round-robin (default: "
                          "the mode's preset; full preset is 3)")
+    ap.add_argument("--replay", choices=("skewed", "burst"), default=None,
+                    help="run the starvation before/after comparison on "
+                         "this arrival pattern instead of Poisson traffic")
     args = ap.parse_args()
-    for row in run(smoke=args.smoke, n_scenes=args.scenes):
+    if args.replay:
+        rows = run_replay(smoke=args.smoke, pattern=args.replay)
+        out = REPLAY_SMOKE_ARTIFACT if args.smoke else REPLAY_ARTIFACT
+    else:
+        rows = run(smoke=args.smoke, n_scenes=args.scenes)
+        out = SMOKE_ARTIFACT if args.smoke else ARTIFACT
+    for row in rows:
         print(",".join(f"{k}={v}" for k, v in row.items()))
-    out = SMOKE_ARTIFACT if args.smoke else ARTIFACT
     print(f"# artifact: {os.path.normpath(out)}")
 
 

@@ -10,10 +10,16 @@ streams into contiguous slot groups of an *elastic* B-slot batch over
 bounds recompilation while a 2-axis ``(B, R)`` policy picks the batch
 size from queue depth and ``rerender_capacity`` from recorded demand
 (``cache``), stream slots — and their ``slot_scene`` gather indices —
-shard across devices (``placement``), and ``server`` ties it into the
-serve loop with latency / throughput / utilization metrics plus
-optional accelerator-in-the-loop simulated latencies.
+shard across devices (``placement``), an admission controller plans
+each round's scene-bucket groups with aging, backpressure, and SLO
+classes (``admission``), and ``server`` ties it into ragged
+mixed-bucket serving rounds (DESIGN.md §11) with latency / throughput /
+utilization / per-bucket fairness metrics plus optional
+accelerator-in-the-loop simulated latencies.
 """
+from repro.serve.admission import (AdmissionConfig, AdmissionController,
+                                   AdmissionRejected, BucketDemand,
+                                   DEFAULT_SLO_CLASSES, SLOClass, jain_index)
 from repro.serve.batcher import ContinuousBatcher, SlotBatch
 from repro.serve.cache import (BucketPolicy, ExecutableCache, pick_capacity,
                                snap_capacity, suggest_buckets,
@@ -21,15 +27,19 @@ from repro.serve.cache import (BucketPolicy, ExecutableCache, pick_capacity,
 from repro.serve.placement import build_render_fn, stream_mesh
 from repro.serve.scenes import (SceneEntry, SceneRegistry, pad_scene,
                                 snap_scene_bucket)
-from repro.serve.server import (PoissonTraffic, ServeConfig, StreamServer,
-                                TrafficConfig)
+from repro.serve.server import (PoissonTraffic, ReplayTraffic, ServeConfig,
+                                StreamServer, TrafficConfig, burst_trace,
+                                skewed_trace)
 from repro.serve.session import SessionManager, StreamSession
 
 __all__ = [
-    "BucketPolicy", "ContinuousBatcher", "ExecutableCache",
-    "PoissonTraffic", "SceneEntry", "SceneRegistry", "ServeConfig",
-    "SessionManager", "SlotBatch", "StreamServer", "StreamSession",
-    "TrafficConfig", "build_render_fn", "pad_scene", "pick_capacity",
+    "AdmissionConfig", "AdmissionController", "AdmissionRejected",
+    "BucketDemand", "BucketPolicy", "ContinuousBatcher",
+    "DEFAULT_SLO_CLASSES", "ExecutableCache", "PoissonTraffic",
+    "ReplayTraffic", "SLOClass", "SceneEntry", "SceneRegistry",
+    "ServeConfig", "SessionManager", "SlotBatch", "StreamServer",
+    "StreamSession", "TrafficConfig", "build_render_fn", "burst_trace",
+    "jain_index", "pad_scene", "pick_capacity", "skewed_trace",
     "snap_capacity", "snap_scene_bucket", "stream_mesh", "suggest_buckets",
     "suggest_capacity", "validate_buckets",
 ]

@@ -67,19 +67,30 @@ class SlotBatch(NamedTuple):
     def active_frames(self) -> int:
         return int(np.asarray(self.counts).sum())
 
+    @property
+    def bound_slots(self) -> int:
+        return sum(s is not None for s in self.sids)
+
 
 class ContinuousBatcher:
     """Scene-aware B-slot batcher over ``engine.render_streams``."""
 
     def __init__(self, slots: int, chunk: int, cam: Camera, *,
                  group: Optional[int] = None,
-                 collect_frames: bool = False):
+                 collect_frames: bool = False,
+                 bucket: Optional[Tuple[int, int]] = None):
         if slots < 1 or chunk < 1:
             raise ValueError(f"need slots >= 1 and chunk >= 1, got "
                              f"{slots}, {chunk}")
         self.slots = int(slots)
         self.chunk = int(chunk)
         self.cam = cam
+        # The scene bucket this batcher's slot group serves (None for
+        # the single-bucket/legacy use). Purely informational — the
+        # server keeps one batcher per bucket for its ragged
+        # mixed-bucket rounds (DESIGN.md §11) and this tag makes traces
+        # and reprs say which group is which.
+        self.bucket = bucket
         # Contiguity granularity for same-scene packing; the server sets
         # this to the per-device shard size B/D. None -> one group (no
         # sharding, packing preference is moot).
@@ -93,6 +104,11 @@ class ContinuousBatcher:
     @property
     def bound(self) -> int:
         return sum(s is not None for s in self._slot_sid)
+
+    def __repr__(self) -> str:
+        return (f"ContinuousBatcher(slots={self.slots}, "
+                f"chunk={self.chunk}, bound={self.bound}, "
+                f"bucket={self.bucket})")
 
     def bound_sids(self) -> List[int]:
         """Session ids currently bound to a slot, slot order."""

@@ -49,13 +49,16 @@ DEFAULT_R_BUCKETS = (8, 16, 32)
 DEFAULT_B_BUCKETS = (2, 4, 8)
 
 
-def validate_buckets(buckets: Sequence[int]) -> None:
+def validate_buckets(buckets: Sequence[int],
+                     name: str = "r_buckets") -> None:
     """Bucket lists must be ascending and unique (snap_capacity scans in
-    order, so a shuffled list would snap to the wrong executable)."""
+    order, so a shuffled list would snap to the wrong executable).
+    ``name`` is the argument being validated — the error must blame the
+    actual offender (b_buckets/scene_buckets validate here too)."""
     if not len(buckets) or list(buckets) != \
             sorted(set(int(r) for r in buckets)):
         raise ValueError(
-            f"r_buckets must be ascending and unique, got {buckets}")
+            f"{name} must be ascending and unique, got {buckets}")
 
 
 def snap_capacity(demand: float, buckets: Sequence[int]) -> int:
@@ -112,8 +115,8 @@ class BucketPolicy:
     quantile: float = 0.9
 
     def __post_init__(self):
-        validate_buckets(self.b_buckets)
-        validate_buckets(self.r_buckets)
+        validate_buckets(self.b_buckets, "b_buckets")
+        validate_buckets(self.r_buckets, "r_buckets")
         if not 0.0 <= self.quantile <= 1.0:
             raise ValueError(f"quantile must be in [0, 1], got "
                              f"{self.quantile}")
@@ -165,6 +168,7 @@ class ExecutableCache:
         self._entries: Dict[Hashable, CacheEntry] = {}
         self.misses = 0
         self.hits = 0
+        self.evicted_keys = 0
         self.log: Deque[Tuple[str, Hashable]] = deque(maxlen=self.LOG_KEEP)
 
     def get(self, key: Hashable,
@@ -182,17 +186,39 @@ class ExecutableCache:
             self.log.append(("hit", key))
         return entry.fn
 
+    def evict_keys(self, match: Callable[[Hashable], bool]) -> int:
+        """Drop every entry whose key matches — the server calls this
+        when a scene bucket leaves ``registry.buckets_in_use()``, so a
+        scene-churning server's executable (and device-constant) memory
+        stays bounded by the buckets actually in use. Returns the count
+        dropped (also accumulated in ``evicted_keys``/``stats()``)."""
+        doomed = [k for k in self._entries if match(k)]
+        for k in doomed:
+            del self._entries[k]
+            self.log.append(("evict", k))
+        self.evicted_keys += len(doomed)
+        return len(doomed)
+
     def __contains__(self, key: Hashable) -> bool:
         return key in self._entries
 
     def __len__(self) -> int:
         return len(self._entries)
 
+    @staticmethod
+    def _key_str(k: Hashable):
+        return list(map(str, k)) if isinstance(k, tuple) else str(k)
+
     def stats(self) -> dict:
         return {
             "distinct_executables": len(self._entries),
             "hits": self.hits,
             "misses": self.misses,
-            "keys": [list(map(str, k)) if isinstance(k, tuple) else str(k)
-                     for k in self._entries],
+            "evicted_keys": self.evicted_keys,
+            "keys": [self._key_str(k) for k in self._entries],
+            # Per-key hit counts: which (bucket, B, R) groups actually
+            # carry the traffic (the mixed-round fairness work reads
+            # this next to the per-bucket latency split).
+            "per_key_hits": {str(k): e.hits
+                             for k, e in self._entries.items()},
         }

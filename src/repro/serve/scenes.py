@@ -56,7 +56,7 @@ def snap_scene_bucket(n: int, buckets: Sequence[int] = DEFAULT_SCENE_BUCKETS
     changing its content — a scene beyond the largest bucket is an
     error, not a clamp.
     """
-    validate_buckets(buckets)
+    validate_buckets(buckets, "scene_buckets")
     for b in buckets:
         if n <= b:
             return int(b)
@@ -127,7 +127,7 @@ class SceneRegistry:
     """
 
     def __init__(self, buckets: Sequence[int] = DEFAULT_SCENE_BUCKETS):
-        validate_buckets(buckets)
+        validate_buckets(buckets, "scene_buckets")
         self.buckets = tuple(int(b) for b in buckets)
         self._entries: Dict[int, SceneEntry] = {}
         self._next_id = 0

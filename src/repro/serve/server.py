@@ -1,33 +1,46 @@
-"""The serve loop: scenes + sessions -> batcher -> cached executable.
+"""The serve loop: scenes + sessions -> admission -> per-bucket batchers.
 
-One ``StreamServer.step()`` is a serving round: pick the round's *scene
-bucket* (drain the in-flight bucket before switching — all streams in
-one batch must share a padded-N bucket so their scenes stack), resize
-the slot batch to the B bucket covering that bucket's queue depth
-(elastic B — carries live on sessions, so resizes drop nothing), admit
-waiting streams of that bucket to free slots (same-scene streams packed
-into contiguous groups), pack up to ``chunk`` pending poses per stream
-into the (B, chunk) batch, render it through the executable for the
-CURRENT ``(scene_bucket, B, R)`` key (built lazily by the
-``ExecutableCache``; sharded across devices when ``placement.stream_mesh``
-finds a usable mesh), then commit carries back and stamp per-frame
-latencies (enqueue -> round end, wall clock).
+One ``StreamServer.step()`` is a *ragged mixed-bucket round* (DESIGN.md
+§11): the admission controller (serve/admission.py) plans which scene
+buckets render this round from per-bucket demand (aging guarantees no
+bucket waits more than ``max_wait_rounds``; SLO classes bias ordering
+and the elastic-B resize), then every planned bucket GROUP — one
+``ContinuousBatcher`` per scene bucket, since a batch can only stack
+same-bucket scenes — resizes, admits its waiting streams, builds its
+(B, chunk) batch, and dispatches through its own cached executable.
+Dispatch is asynchronous: all groups are launched back to back and ONE
+``block_until_ready`` barrier closes the round, so a small bucket's
+kernel overlaps a big bucket's instead of waiting whole rounds behind
+it — the paper's no-stall thesis applied at fleet scale (the same
+pytrees-of-same-shape-leaf-groups idiom jax.experimental.treevec uses:
+group leaves by shape signature, vectorize per group, recombine). All
+groups' carries commit together after the barrier.
 
 Scenes come from a ``SceneRegistry`` (serve/scenes.py): pass one with
 scenes pre-registered, or pass a bare ``GaussianScene`` and the server
 registers it as the single default scene (the PR-3 single-scene server
 is exactly this degenerate case). Sessions are keyed by ``scene_id``;
-each round's distinct scenes are stacked ``(B, N_bucket, ...)`` and the
+each group's distinct scenes are stacked ``(B, N_bucket, ...)`` and the
 engine gathers per slot (``slot_scene``), so any mix of same-bucket
 scenes rides ONE executable — the cache key is
 ``(scene_bucket, B, chunk, R, window, impl)`` and never names a scene.
 
-Both serving shapes are workload-adaptive through ``cache.BucketPolicy``:
+Serving shapes stay workload-adaptive through ``cache.BucketPolicy``:
 R re-picks every ``adapt_every`` busy rounds from a rolling history of
-recorded re-render demand, B re-snaps every round from queue depth.
-With 2-3 buckets per axis the distinct compilations stay bounded by
-``policy.max_keys`` per scene bucket no matter how long the server runs
-(asserted in benchmarks/serve_bench.py).
+recorded re-render demand; each bucket's B re-snaps every round from
+that bucket's (SLO-weighted) queue depth. With 2-3 buckets per axis the
+distinct compilations stay bounded by ``policy.max_keys`` per scene
+bucket in use no matter how long the server runs (asserted in
+benchmarks/serve_bench.py), and ``evict_scene`` drops executables whose
+scene bucket left use, so a scene-churning server's device memory stays
+bounded too.
+
+Backpressure: with ``AdmissionConfig.max_waiting`` set, ``attach``
+raises ``AdmissionRejected`` once the waiting set is full (``try_attach``
+returns None instead; ``run`` defers the arrival and retries next
+round). ``report()`` publishes per-bucket p50/p99 latency, per-bucket
+max wait, and a Jain fairness index over service shares next to the
+global metrics.
 
 ``sim_latency=True`` closes the loop with the paper's accelerator model:
 every rendered frame's ``FrameRecord`` (with its recorded device-LDU
@@ -36,17 +49,21 @@ through ``core/streaming.simulate_sequence(policy="recorded")`` — so
 serve_bench.json shows the simulated ASIC cycles next to the wall-clock
 latencies for the very frames this process served.
 
-``PoissonTraffic`` drives benchmarks and tests: streams arrive per round
-with Poisson counts, each carrying a heterogeneous trajectory
-(dolly/orbit, randomized geometry and length), round-robined over
-``TrafficConfig.scenes`` scene indices.
+Traffic: ``PoissonTraffic`` drives the steady-state benchmarks (Poisson
+arrivals of heterogeneous dolly/orbit trajectories round-robined over
+scenes); ``ReplayTraffic`` replays a deterministic arrival trace —
+``skewed_trace`` (10:1 bucket skew, the starvation reproducer) and
+``burst_trace`` (quiet rounds punctuated by arrival bursts) build the
+traces benchmarks/serve_bench.py uses for its before/after fairness
+comparison.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple, Union
+from typing import (Deque, Dict, List, Optional, Sequence, Tuple, Union)
 
 import jax
 import numpy as np
@@ -59,6 +76,8 @@ from repro.core.streaming import (AcceleratorConfig, FrameWork,
                                   frameworks_from_stacked,
                                   simulate_sequence, throughput)
 from repro.scenes.trajectory import dolly_trajectory, orbit_trajectory
+from repro.serve.admission import (AdmissionConfig, AdmissionController,
+                                   AdmissionRejected, BucketDemand)
 from repro.serve.batcher import ContinuousBatcher
 from repro.serve.cache import (BucketPolicy, ExecutableCache,
                                validate_buckets)
@@ -82,12 +101,14 @@ class ServeConfig:
     collect_frames: bool = False  # retain rendered frames on sessions
     sim_latency: bool = False   # accelerator-in-the-loop metrics
     sim_keep: int = 4096        # most recent frames kept for the sim
+    # Round planning + backpressure + SLO classes (serve/admission.py).
+    admission: AdmissionConfig = AdmissionConfig()
 
     def __post_init__(self):
-        validate_buckets(self.r_buckets)
+        validate_buckets(self.r_buckets, "r_buckets")
         if self.b_buckets is not None:
-            validate_buckets(self.b_buckets)
-        validate_buckets(self.scene_buckets)
+            validate_buckets(self.b_buckets, "b_buckets")
+        validate_buckets(self.scene_buckets, "scene_buckets")
 
     @property
     def slot_buckets(self) -> Tuple[int, ...]:
@@ -106,6 +127,22 @@ class TrafficConfig:
     scenes: int = 1             # round-robin arrivals over this many scenes
 
 
+def sample_trajectory(rng: np.random.Generator,
+                      cfg: TrafficConfig) -> np.ndarray:
+    """One heterogeneous dolly/orbit trajectory (shared by both traffic
+    generators so a replay trace and a Poisson run draw from the same
+    pose distribution)."""
+    n = int(rng.integers(cfg.min_frames, cfg.max_frames + 1))
+    if rng.random() < 0.5:
+        dx, dy = rng.uniform(-0.4, 0.4), rng.uniform(-0.4, 0.1)
+        return np.asarray(dolly_trajectory(
+            n, start=(dx, dy, rng.uniform(-3.0, -1.5)),
+            target=(0.0, 0.0, 6.0)))
+    return np.asarray(orbit_trajectory(
+        n, radius=rng.uniform(5.0, 8.0), target=(0.0, 0.0, 6.0),
+        height=rng.uniform(-1.0, 0.0)))
+
+
 class PoissonTraffic:
     """Poisson arrivals of heterogeneous trajectories over K scenes."""
 
@@ -119,18 +156,6 @@ class PoissonTraffic:
     def done(self) -> bool:
         return self.remaining <= 0
 
-    def _trajectory(self) -> np.ndarray:
-        c = self.cfg
-        n = int(self.rng.integers(c.min_frames, c.max_frames + 1))
-        if self.rng.random() < 0.5:
-            dx, dy = self.rng.uniform(-0.4, 0.4), self.rng.uniform(-0.4, 0.1)
-            return np.asarray(dolly_trajectory(
-                n, start=(dx, dy, self.rng.uniform(-3.0, -1.5)),
-                target=(0.0, 0.0, 6.0)))
-        return np.asarray(orbit_trajectory(
-            n, radius=self.rng.uniform(5.0, 8.0), target=(0.0, 0.0, 6.0),
-            height=self.rng.uniform(-1.0, 0.0)))
-
     def arrivals(self) -> List[Tuple[np.ndarray, int]]:
         """This round's ``(poses, scene_index)`` arrivals; scene_index
         round-robins over ``cfg.scenes`` (the server maps it onto its
@@ -141,9 +166,80 @@ class PoissonTraffic:
         self.remaining -= k
         out = []
         for _ in range(k):
-            out.append((self._trajectory(),
+            out.append((sample_trajectory(self.rng, self.cfg),
                         self.arrived % max(self.cfg.scenes, 1)))
             self.arrived += 1
+        return out
+
+
+def skewed_trace(n_streams: int, skew: int = 10,
+                 majority_scene: int = 0,
+                 minority_scene: int = 1) -> List[List[int]]:
+    """Arrival trace with ``skew``:1 per-round bucket skew — each round
+    brings ``skew`` majority-scene streams then ONE minority-scene
+    stream (the minority arrives last so drain-mode scheduling shows
+    its worst case) until ``n_streams`` have arrived. The starvation
+    reproducer: under drain-before-switch the minority waits for the
+    whole majority backlog; under mixed rounds + aging its max wait is
+    bounded by ``max_wait_rounds``."""
+    if skew < 1:
+        raise ValueError(f"skew must be >= 1, got {skew}")
+    trace: List[List[int]] = []
+    n = 0
+    while n < n_streams:
+        rnd = [majority_scene] * min(skew, n_streams - n)
+        n += len(rnd)
+        if n < n_streams:
+            rnd.append(minority_scene)
+            n += 1
+        trace.append(rnd)
+    return trace
+
+
+def burst_trace(n_streams: int, burst_every: int = 4,
+                burst_size: int = 6, scenes: int = 2) -> List[List[int]]:
+    """Quiet rounds punctuated by bursts: every ``burst_every`` rounds,
+    ``burst_size`` streams arrive at once, round-robined over
+    ``scenes`` scene indices — the backpressure/aging stressor (a burst
+    overfills the waiting set, then the queue drains over the quiet
+    rounds)."""
+    if burst_every < 1 or burst_size < 1:
+        raise ValueError(f"burst_every and burst_size must be >= 1, got "
+                         f"{burst_every}, {burst_size}")
+    trace: List[List[int]] = []
+    n = 0
+    while n < n_streams:
+        trace.extend([[]] * (burst_every - 1))
+        burst = [i % max(scenes, 1)
+                 for i in range(n, min(n + burst_size, n_streams))]
+        n += len(burst)
+        trace.append(burst)
+    return trace
+
+
+class ReplayTraffic:
+    """Deterministic arrival replay: ``trace`` is a list of per-round
+    scene-index lists (see ``skewed_trace``/``burst_trace``); each entry
+    becomes one arrival with a trajectory sampled from ``cfg``'s pose
+    distribution. Same ``arrivals()``/``done`` protocol as
+    ``PoissonTraffic`` — ``StreamServer.run`` takes either."""
+
+    def __init__(self, trace: Sequence[Sequence[int]], cfg: TrafficConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self._rounds: Deque[List[int]] = deque(list(r) for r in trace)
+        self.arrived = 0
+
+    @property
+    def done(self) -> bool:
+        return not self._rounds
+
+    def arrivals(self) -> List[Tuple[np.ndarray, int]]:
+        if self.done:
+            return []
+        out = [(sample_trajectory(self.rng, self.cfg), int(idx))
+               for idx in self._rounds.popleft()]
+        self.arrived += len(out)
         return out
 
 
@@ -171,26 +267,32 @@ class StreamServer:
                                    r_buckets=scfg.r_buckets,
                                    quantile=scfg.quantile)
         self.manager = SessionManager(base_cfg.window)
+        self.admission = AdmissionController(scfg.admission)
         self._meshes: Dict[int, object] = {}
-        b0 = scfg.slot_buckets[0]
-        self.batcher = ContinuousBatcher(
-            b0, scfg.chunk, cam, group=self._group_for(b0),
-            collect_frames=scfg.collect_frames)
+        # One batcher per scene bucket in use (the ragged mixed-bucket
+        # round's slot groups — a batch can only stack same-bucket
+        # scenes, so the bucket IS the group signature). Created eagerly
+        # for registered buckets, lazily for buckets registered later.
+        self._batchers: Dict[Tuple[int, int], ContinuousBatcher] = {}
+        for bucket in self.registry.buckets_in_use():
+            self._batcher_for(bucket)
         self.cache = ExecutableCache()
         self.capacity = int(scfg.r_buckets[0])
         self.capacity_history: List[int] = [self.capacity]
-        self.slots_history: List[int] = [b0]
+        self.slots_history: List[int] = [scfg.slot_buckets[0]]
         self.streams_seen = 0
         self.streams_finished = 0
-        # Bounded recent-latency reservoir: exact counters above stay
+        # Bounded recent-latency reservoirs: exact counters above stay
         # lifetime-accurate, percentiles are over the newest samples —
         # finished StreamSession objects are NOT retained (a churning
-        # server would otherwise grow memory without bound).
+        # server would otherwise grow memory without bound). Per-bucket
+        # reservoirs feed the fairness split in report().
         self._latencies: Deque[float] = deque(maxlen=self.LATENCY_KEEP)
+        self._bucket_latencies: Dict[Tuple[int, int], Deque[float]] = {}
         self.rounds = 0
         self.busy_rounds = 0
         self.active_slot_frames = 0
-        self.capacity_frames = 0       # sum of B*chunk over busy rounds
+        self.capacity_frames = 0       # sum of B*chunk over rendered groups
         self.render_seconds = 0.0
         self.warmup_seconds = 0.0
         self.max_concurrent = 0
@@ -198,7 +300,7 @@ class StreamServer:
         # Rolling per-sparse-frame demand samples (flat ints — all the
         # capacity picker needs), newest last.
         self._demand: Deque[int] = deque(maxlen=scfg.history)
-        # Accelerator-in-the-loop trace: per-round device-side records
+        # Accelerator-in-the-loop trace: per-group device-side records
         # in service order (host conversion is deferred to report() so
         # the serving rounds never pay record transfers), bounded like
         # the latency reservoir.
@@ -219,9 +321,19 @@ class StreamServer:
         return entry
 
     def evict_scene(self, scene_id: int):
-        """Evict a drained scene (raises while streams are attached)."""
+        """Evict a drained scene (raises while streams are attached).
+
+        If the scene's bucket leaves ``registry.buckets_in_use()``, the
+        bucket's batcher (device-resident idle carries) and every cached
+        executable keyed on that bucket are dropped too — a long-running
+        server that churns scenes across buckets must not grow device
+        memory without bound (``cache.stats()["evicted_keys"]`` counts
+        the drops)."""
         entry = self.registry.evict(scene_id)
         self._stacks.clear()
+        if entry.bucket not in self.registry.buckets_in_use():
+            self._batchers.pop(entry.bucket, None)
+            self.cache.evict_keys(lambda k: k[0] == entry.bucket)
         return entry
 
     def scene_for_index(self, idx: int) -> int:
@@ -234,14 +346,36 @@ class StreamServer:
         return time.perf_counter()
 
     def attach(self, poses, now: Optional[float] = None,
-               scene_id: Optional[int] = None) -> StreamSession:
+               scene_id: Optional[int] = None,
+               slo: Optional[str] = None) -> StreamSession:
+        """Attach a stream, or raise ``AdmissionRejected`` when the
+        waiting set is full (``AdmissionConfig.max_waiting`` — the
+        backpressure contract; use ``try_attach`` for a non-raising
+        probe). ``slo`` names a service class from
+        ``AdmissionConfig.slo_classes``."""
         sid = self.default_scene_id if scene_id is None else scene_id
         self.registry.get(sid)         # raises on unknown scene
+        self.scfg.admission.slo(slo)   # raises on unknown SLO class
+        if not self.admission.offer(len(self.manager.waiting())):
+            raise AdmissionRejected(
+                f"waiting set is full "
+                f"({self.scfg.admission.max_waiting}); retry later")
         sess = self.manager.attach(
-            poses, now=self.clock() if now is None else now, scene_id=sid)
+            poses, now=self.clock() if now is None else now, scene_id=sid,
+            slo=slo)
         self.registry.acquire(sid)     # pin only once the attach stuck
         self.streams_seen += 1
         return sess
+
+    def try_attach(self, poses, now: Optional[float] = None,
+                   scene_id: Optional[int] = None,
+                   slo: Optional[str] = None) -> Optional[StreamSession]:
+        """``attach`` that returns None instead of raising on
+        backpressure (the defer signal for callers that retry)."""
+        try:
+            return self.attach(poses, now=now, scene_id=scene_id, slo=slo)
+        except AdmissionRejected:
+            return None
 
     def detach(self, sid: int) -> StreamSession:
         """Cancel a stream mid-flight: remove its session AND release its
@@ -279,10 +413,41 @@ class StreamServer:
         return build_render_fn(self.cam, cfg, self._mesh_for(b),
                                multi_scene=True)
 
-    def _executable(self, bucket):
-        b, r = self.batcher.slots, self.capacity
+    def _executable(self, bucket, b: int):
+        r = self.capacity
         return self.cache.get(self._key_for(bucket, b, r),
                               lambda: self._build_for(b, r))
+
+    def _batcher_for(self, bucket) -> ContinuousBatcher:
+        bat = self._batchers.get(bucket)
+        if bat is None:
+            b0 = self.scfg.slot_buckets[0]
+            bat = ContinuousBatcher(
+                b0, self.scfg.chunk, self.cam, group=self._group_for(b0),
+                collect_frames=self.scfg.collect_frames, bucket=bucket)
+            self._batchers[bucket] = bat
+        return bat
+
+    @property
+    def batcher(self) -> ContinuousBatcher:
+        """The sole in-use batcher — single-bucket convenience (tests,
+        the degenerate single-scene server). Ambiguous with multiple
+        buckets in flight: use ``batcher_for`` then."""
+        if len(self._batchers) == 1:
+            return next(iter(self._batchers.values()))
+        raise ValueError(
+            f"{len(self._batchers)} bucket batchers in use "
+            f"({list(self._batchers)}); use batcher_for(bucket)")
+
+    def batcher_for(self, bucket) -> ContinuousBatcher:
+        """The slot-group batcher serving ``bucket`` (created on first
+        use)."""
+        return self._batcher_for(bucket)
+
+    @property
+    def total_bound(self) -> int:
+        """Streams bound to a slot across every bucket group."""
+        return sum(bat.bound for bat in self._batchers.values())
 
     def _stack_for(self, scene_ids: Tuple[Optional[int], ...],
                    bucket, size: int):
@@ -304,18 +469,25 @@ class StreamServer:
 
         Runs each combination once on an all-masked (count-0) batch so
         jit compile cost lands here instead of inside the first serving
-        rounds' latencies. Returns wall seconds spent. Optional — an
-        unwarmed server lazily compiles (at most) one executable per key
-        on first use, it just bills that to the unlucky round. Safe
-        mid-serving: the warmup batch is synthesized from scratch
-        (``empty_batch``), never popping bound sessions' poses.
+        rounds' latencies. Returns wall seconds spent THIS call;
+        ``warmup_seconds`` accumulates across calls (a server warmed
+        again after ``register_scene`` must not forget the first bill).
+        Optional — an unwarmed server lazily compiles (at most) one
+        executable per key on first use, it just bills that to the
+        unlucky round. Safe mid-serving: the warmup batch is synthesized
+        from scratch (``empty_batch``), never popping bound sessions'
+        poses, and warmup scene stacks deliberately bypass the bounded
+        ``_stacks`` memo — warming every (bucket, B) combination would
+        otherwise evict the in-flight rounds' live stack keys.
         """
         t0 = self.clock()
         for bucket in self.registry.buckets_in_use():
-            scenes_one = (self.registry.by_bucket(bucket)[0],)
+            ids = (self.registry.by_bucket(bucket)[0],)
+            bat = self._batcher_for(bucket)
             for b in self.policy.b_buckets:
-                batch = self.batcher.empty_batch(slots=b)
-                scenes = self._stack_for(scenes_one, bucket, b)
+                batch = bat.empty_batch(slots=b)
+                # Transient stack: NOT memoized (see docstring).
+                scenes = self.registry.stack(ids, b)
                 for r in self.policy.r_buckets:
                     fn = self.cache.get(
                         self._key_for(bucket, b, r),
@@ -323,8 +495,9 @@ class StreamServer:
                     jax.block_until_ready(fn(
                         scenes, batch.poses, batch.counts, batch.phases,
                         batch.carries, batch.slot_scene).frames)
-        self.warmup_seconds = self.clock() - t0
-        return self.warmup_seconds
+        spent = self.clock() - t0
+        self.warmup_seconds += spent
+        return spent
 
     # -- adaptive shapes ---------------------------------------------------
     def _bucket_of(self, sess: StreamSession) -> Tuple[int, int]:
@@ -332,40 +505,47 @@ class StreamServer:
             else sess.scene_id
         return self.registry.bucket_of(sid)
 
-    def _round_bucket(self) -> Optional[Tuple[int, int]]:
-        """The scene bucket this round serves: the in-flight bucket while
-        any session is bound (a batch can only stack same-bucket
-        scenes), else the oldest waiting session's bucket. None = no
-        work anywhere."""
-        for sid in self.batcher.bound_sids():
-            sess = self.manager.sessions.get(sid)
-            if sess is not None:
-                return self._bucket_of(sess)
-        waiting = self.manager.waiting()
-        if waiting:
-            return self._bucket_of(waiting[0])
-        return None
+    def _bucket_demand(self) -> Dict[Tuple[int, int], BucketDemand]:
+        """Per-bucket demand snapshot for the admission controller:
+        streams wanting service (bound, or waiting with pending poses),
+        their SLO weights, and the oldest-stream order tiebreak."""
+        demand: Dict[Tuple[int, int], BucketDemand] = {}
+        for s in self.manager.sessions.values():
+            if s.slot is None and not s.pending:
+                continue
+            b = self._bucket_of(s)
+            d = demand.setdefault(b, BucketDemand())
+            cls = self.scfg.admission.slo(s.slo)
+            d.depth += 1
+            # weight >= 1 inflates effective depth (snaps B up sooner);
+            # < 1 never shrinks it below the true queue.
+            d.weighted_depth += max(1.0, cls.weight)
+            d.weight = max(d.weight, cls.weight)
+            d.order = min(d.order, s.sid)
+            if s.slot is not None:
+                d.bound += 1
+            if s.pending:
+                d.pending += 1
+            if cls.max_wait_rounds is not None:
+                d.wait_bound = cls.max_wait_rounds if d.wait_bound is None \
+                    else min(d.wait_bound, cls.max_wait_rounds)
+        return demand
 
-    def _queue_depth(self, bucket) -> int:
-        """Streams of this bucket that currently want service: bound, or
-        waiting with pending poses."""
-        return sum(1 for s in self.manager.sessions.values()
-                   if (s.slot is not None or s.pending)
-                   and self._bucket_of(s) == bucket)
-
-    def _maybe_resize(self, bucket) -> None:
-        """Snap B to the bucket covering queue depth (elastic B). The
-        batcher resize unbinds overflow sessions on shrink — carries
-        stay on the sessions, so the resize drops nothing."""
+    def _maybe_resize(self, bucket, d: BucketDemand) -> None:
+        """Snap this bucket's B to the bucket covering its SLO-weighted
+        queue depth (elastic B). The batcher resize unbinds overflow
+        sessions on shrink — carries stay on the sessions, so the
+        resize drops nothing."""
         if self.scfg.b_buckets is None:
             return
-        b = self.policy.pick_slots(self._queue_depth(bucket))
-        if b != self.batcher.slots:
-            self.batcher.resize(b, self.manager, group=self._group_for(b))
+        bat = self._batcher_for(bucket)
+        b = self.policy.pick_slots(int(math.ceil(d.weighted_depth)))
+        if b != bat.slots:
+            bat.resize(b, self.manager, group=self._group_for(b))
             self.slots_history.append(b)
 
     def _observe(self, result) -> None:
-        """Fold the round's records into the demand history; re-pick R.
+        """Fold a group's records into the demand history; re-pick R.
 
         Only real (non-padding) sparse frames contribute demand samples
         — ``plan.rerender_demand`` per frame, the same statistic
@@ -388,7 +568,7 @@ class StreamServer:
 
     # -- accelerator-in-the-loop -------------------------------------------
     def _record_sim(self, batch, result) -> None:
-        """Stash the round's stacked records (device references — ONE
+        """Stash a group's stacked records (device references — ONE
         deque append, no host transfer on the serving path; the
         FrameWork conversion is deferred to ``_sim_report`` so recording
         never inflates the wall-clock latencies being measured)."""
@@ -402,9 +582,14 @@ class StreamServer:
                 c for c, a in zip(old_counts, old_active) if a))
         self._sim_rounds.append((result.records.stacked, counts, active))
 
-    def _sim_frameworks(self) -> List[FrameWork]:
-        """Host-convert the stashed rounds into per-frame FrameWorks,
-        service order (round-major, slot order within a round)."""
+    def _sim_frameworks(self) -> Tuple[List[FrameWork], int]:
+        """Host-convert the stashed groups into per-frame FrameWorks,
+        service order (round-major, slot order within a group). Returns
+        ``(frames, tail_trimmed)`` — the deque bounds round memory, the
+        ``sim_keep`` trim bounds the sim itself, and the trim count
+        must reach the drop accounting (report-time, no mutation: the
+        deque-evicted drops live in ``_sim_dropped``; summing both at
+        report keeps ``report()`` idempotent)."""
         frames: List[FrameWork] = []
         n_px = self.cam.height * self.cam.width
         for stacked, counts, active in self._sim_rounds:
@@ -415,14 +600,14 @@ class StreamServer:
                 frames.extend(frameworks_from_stacked(
                     StackedRecords(recs), self.cam.tiles_x,
                     self.cam.tiles_y, n_px)[:counts[i]])
-        # The round deque bounds memory; this bounds the sim itself.
-        return frames[-self.scfg.sim_keep:]
+        trimmed = max(0, len(frames) - self.scfg.sim_keep)
+        return frames[-self.scfg.sim_keep:], trimmed
 
     def _sim_report(self) -> Optional[dict]:
         """Replay the served frames through the accelerator model —
         simulated ASIC cycles for the exact schedules the jitted engine
         recorded (policy="recorded", streaming pipeline on)."""
-        frames = self._sim_frameworks()
+        frames, trimmed = self._sim_frameworks()
         if not frames:
             return None
         acfg = AcceleratorConfig(num_blocks=self.base_cfg.ldu_blocks)
@@ -436,7 +621,9 @@ class StreamServer:
         service = np.diff(ends, prepend=0.0)
         return {
             "frames": len(frames),
-            "frames_dropped": self._sim_dropped,
+            # BOTH drop paths: rounds evicted from the bounded deque
+            # (_sim_dropped) AND the report-time tail trim to sim_keep.
+            "frames_dropped": self._sim_dropped + trimmed,
             "cycles_per_frame": round(float(agg["cycles_per_frame"]), 1),
             "utilization": round(float(agg["utilization"]), 4),
             "sort_stall_cycles": round(float(agg["sort_stall"]), 1),
@@ -449,76 +636,143 @@ class StreamServer:
     # -- the serving round -------------------------------------------------
     def step(self) -> dict:
         self.rounds += 1
-        bucket = self._round_bucket()
-        if bucket is None:
-            info = {"round": self.rounds, "frames": 0, "bound_slots": 0,
-                    "slots": self.batcher.slots, "capacity": self.capacity}
-            self.trace.append(info)
-            return info
-        self._maybe_resize(bucket)
-        self.batcher.admit(self.manager,
-                           allowed=set(self.registry.by_bucket(bucket)))
-        self.max_concurrent = max(self.max_concurrent, self.batcher.bound)
-        batch = self.batcher.build(self.manager)
-        if batch.active_frames == 0:
-            info = {"round": self.rounds, "frames": 0,
-                    "bound_slots": self.batcher.bound,
-                    "slots": self.batcher.slots,
-                    "capacity": self.capacity}
-            self.trace.append(info)
-            return info
-        scenes = self._stack_for(batch.scene_ids, bucket,
-                                 self.batcher.slots)
-        fn = self._executable(bucket)
+        demand = self._bucket_demand()
+        plan = self.admission.plan_round(demand)
         t0 = self.clock()
-        result = fn(scenes, batch.poses, batch.counts, batch.phases,
-                    batch.carries, batch.slot_scene)
-        jax.block_until_ready((result.frames, result.carries))
+        # Launch every planned bucket group back to back (async
+        # dispatch): group k+1's host-side batch build overlaps group
+        # k's device execution, and the single barrier below closes the
+        # whole ragged round.
+        groups = []
+        for bucket in plan:
+            bat = self._batcher_for(bucket)
+            self._maybe_resize(bucket, demand[bucket])
+            bat.admit(self.manager,
+                      allowed=set(self.registry.by_bucket(bucket)))
+            batch = bat.build(self.manager)
+            if batch.active_frames == 0:
+                continue
+            scenes = self._stack_for(batch.scene_ids, bucket, bat.slots)
+            fn = self._executable(bucket, bat.slots)
+            result = fn(scenes, batch.poses, batch.counts, batch.phases,
+                        batch.carries, batch.slot_scene)
+            groups.append((bucket, bat, batch, result))
+        self.max_concurrent = max(self.max_concurrent, self.total_bound)
+        served = [bucket for bucket, *_ in groups]
+        self.admission.note_round(demand, served)
+        if not groups:
+            info = {"round": self.rounds, "frames": 0, "bound_slots": 0,
+                    "groups": [], "capacity": self.capacity}
+            self.trace.append(info)
+            return info
+        jax.block_until_ready([(res.frames, res.carries)
+                               for *_, res in groups])
         t1 = self.clock()
-        detached = self.batcher.commit(batch, result, self.manager, t1)
-        for sess in detached:
-            self.registry.release(sess.scene_id)
-        self.streams_finished += len(detached)
-        counts = np.asarray(batch.counts)
-        for i in range(len(batch.sids)):
-            self._latencies.extend(
-                t1 - t for t in batch.enq_times[i][:counts[i]])
         self.busy_rounds += 1          # before _observe: its adapt cadence
-        self._observe(result)          # counts busy rounds
-        if self.scfg.sim_latency:
-            self._record_sim(batch, result)
-        self.active_slot_frames += batch.active_frames
-        self.capacity_frames += self.batcher.slots * self.scfg.chunk
+        total_frames = 0
+        group_infos = []
+        scene_ids_served: List[int] = []
+        for bucket, bat, batch, result in groups:
+            detached = bat.commit(batch, result, self.manager, t1)
+            for sess in detached:
+                self.registry.release(sess.scene_id)
+            self.streams_finished += len(detached)
+            counts = np.asarray(batch.counts)
+            blat = self._bucket_latencies.setdefault(
+                bucket, deque(maxlen=self.LATENCY_KEEP))
+            for i in range(len(batch.sids)):
+                lats = [t1 - t for t in batch.enq_times[i][:counts[i]]]
+                self._latencies.extend(lats)
+                blat.extend(lats)
+            self._observe(result)      # counts busy rounds
+            if self.scfg.sim_latency:
+                self._record_sim(batch, result)
+            self.admission.record_service(bucket, batch.active_frames)
+            self.active_slot_frames += batch.active_frames
+            self.capacity_frames += bat.slots * self.scfg.chunk
+            total_frames += batch.active_frames
+            ids = [i for i in batch.scene_ids if i is not None]
+            scene_ids_served.extend(ids)
+            group_infos.append({
+                "scene_bucket": bucket, "frames": batch.active_frames,
+                "bound_slots": batch.bound_slots, "slots": bat.slots,
+                "scene_ids": ids, "detached": len(detached)})
         self.render_seconds += t1 - t0
-        info = {"round": self.rounds, "frames": batch.active_frames,
-                "bound_slots": sum(s is not None for s in batch.sids),
-                "slots": self.batcher.slots,
-                "scene_bucket": bucket,
-                "scene_ids": [i for i in batch.scene_ids if i is not None],
+        info = {"round": self.rounds, "frames": total_frames,
+                "bound_slots": sum(g["bound_slots"] for g in group_infos),
+                "groups": group_infos,
+                "scene_ids": scene_ids_served,
                 "capacity": self.capacity,
                 "render_seconds": round(t1 - t0, 4),
-                "detached": len(detached)}
+                "detached": sum(g["detached"] for g in group_infos)}
+        if len(group_infos) == 1:
+            # Single-group rounds keep the legacy flat fields.
+            info["scene_bucket"] = group_infos[0]["scene_bucket"]
+            info["slots"] = group_infos[0]["slots"]
         self.trace.append(info)
         return info
 
-    def run(self, traffic: Optional[PoissonTraffic] = None,
-            max_rounds: int = 1000) -> dict:
-        """Serve until traffic is drained (or ``max_rounds``); report."""
+    def run(self, traffic=None, max_rounds: int = 1000) -> dict:
+        """Serve until traffic is drained (or ``max_rounds``); report.
+
+        ``traffic`` is anything with the ``arrivals()``/``done``
+        protocol (``PoissonTraffic``, ``ReplayTraffic``). Arrivals the
+        admission controller defers (backpressure) are retried next
+        round, not dropped."""
+        deferred: List[Tuple[np.ndarray, int]] = []
         while self.rounds < max_rounds:
             if traffic is not None:
-                for poses, scene_idx in traffic.arrivals():
-                    self.attach(poses,
-                                scene_id=self.scene_for_index(scene_idx))
-            if (traffic is None or traffic.done) and not self.manager.sessions:
+                offered = deferred + traffic.arrivals()
+                deferred = []
+                for poses, scene_idx in offered:
+                    sess = self.try_attach(
+                        poses, scene_id=self.scene_for_index(scene_idx))
+                    if sess is None:
+                        deferred.append((poses, scene_idx))
+            if (traffic is None or traffic.done) and not deferred \
+                    and not self.manager.sessions:
                 break
             self.step()
         return self.report()
 
     # -- metrics -----------------------------------------------------------
+    @staticmethod
+    def _pct_ms(lat: np.ndarray, q: float) -> Optional[float]:
+        return round(1e3 * float(np.percentile(lat, q)), 3) \
+            if lat.size else None
+
+    def _per_bucket_report(self) -> dict:
+        """Per-scene-bucket fairness split: latency percentiles over the
+        bucket's own reservoir next to the admission controller's
+        wait/share accounting."""
+        adm = self.admission
+        shares = adm.shares()
+        buckets = (set(adm.demand_rounds) | set(self._bucket_latencies)
+                   | set(self._batchers))
+        out = {}
+        for b in sorted(buckets):
+            lat = np.asarray(self._bucket_latencies.get(b, ()))
+            bat = self._batchers.get(b)
+            out[str(b)] = {
+                "frames": adm.frames_served.get(b, 0),
+                "latency_p50_ms": self._pct_ms(lat, 50),
+                "latency_p99_ms": self._pct_ms(lat, 99),
+                "max_wait_rounds": adm.max_wait.get(b, 0),
+                "demand_rounds": adm.demand_rounds.get(b, 0),
+                "served_rounds": adm.served_rounds.get(b, 0),
+                "share": round(shares.get(b, 1.0), 4),
+                "slots": bat.slots if bat is not None else None,
+            }
+        return out
+
     def report(self) -> dict:
         lat = np.asarray(self._latencies)
         frames = int(self.active_slot_frames)
         meshes = [m for m in self._meshes.values() if m is not None]
+        adm = self.admission.report()
+        fairness = {k: adm[k] for k in
+                    ("mode", "jain_service", "max_wait_rounds",
+                     "max_wait_rounds_config", "deferred")}
         return {
             "streams_served": self.streams_seen,
             "streams_finished": self.streams_finished,
@@ -526,19 +780,20 @@ class StreamServer:
             "frames": frames,
             "rounds": self.rounds,
             "busy_rounds": self.busy_rounds,
-            "latency_p50_ms": round(1e3 * float(np.percentile(lat, 50)), 3)
-            if lat.size else None,
-            "latency_p99_ms": round(1e3 * float(np.percentile(lat, 99)), 3)
-            if lat.size else None,
+            "latency_p50_ms": self._pct_ms(lat, 50),
+            "latency_p99_ms": self._pct_ms(lat, 99),
             "frames_per_second": round(frames / self.render_seconds, 2)
             if self.render_seconds > 0 else None,
             "slot_utilization": round(frames / self.capacity_frames, 4)
             if self.capacity_frames else 0.0,
             "capacity": self.capacity,
             "capacity_history": list(self.capacity_history),
-            "slots": self.batcher.slots,
+            "slots": max((bat.slots for bat in self._batchers.values()),
+                         default=self.scfg.slot_buckets[0]),
             "slots_history": list(self.slots_history),
             "scenes": self.registry.stats(),
+            "fairness": fairness,
+            "per_bucket": self._per_bucket_report(),
             "sim": self._sim_report(),
             "warmup_seconds": round(self.warmup_seconds, 3),
             "rounds_trace": list(self.trace),

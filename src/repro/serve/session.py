@@ -38,6 +38,8 @@ class StreamSession:
     pending: Deque[Tuple[np.ndarray, float]]  # (pose (4,4), enqueue time)
     attached_at: float
     scene_id: Optional[int] = None        # registry key (None = default)
+    slo: Optional[str] = None             # SLO class name (None = default;
+    #                                       serve/admission.py resolves it)
     carry: Optional[EngineCarry] = None   # None until the first chunk
     slot: Optional[int] = None            # batcher slot, None = waiting
     frames_rendered: int = 0
@@ -81,23 +83,25 @@ class SessionManager:
 
     def attach(self, poses=None, *, now: float = 0.0,
                closed: bool = True,
-               scene_id: Optional[int] = None) -> StreamSession:
+               scene_id: Optional[int] = None,
+               slo: Optional[str] = None) -> StreamSession:
         """Register a stream; optionally seed its pose queue.
 
         ``closed=True`` (the default) marks the trajectory complete at
         attach time — the session auto-detaches once drained. Pass
         ``closed=False`` for live streams that keep ``submit``-ing.
         ``scene_id`` keys the stream to a registry scene (None: the
-        server substitutes its default scene). Phase assignment stays
-        scene-agnostic on purpose — the stagger balances *device* load
-        and the device is shared across scenes.
+        server substitutes its default scene); ``slo`` names a service
+        class (serve/admission.py — None: the default class). Phase
+        assignment stays scene-agnostic on purpose — the stagger
+        balances *device* load and the device is shared across scenes.
         """
         sid = self._next_sid
         self._next_sid += 1
         phase = self._assign_phase()
         self._phase_load[phase] += 1
         sess = StreamSession(sid=sid, phase=phase, pending=deque(),
-                             attached_at=now, scene_id=scene_id)
+                             attached_at=now, scene_id=scene_id, slo=slo)
         if poses is not None:
             sess.submit(poses, now)
         if closed and not sess.pending:

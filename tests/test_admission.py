@@ -1,0 +1,310 @@
+"""Admission control (serve/admission.py) + the serve-loop bugfix
+satellites: round planning (drain vs mixed, aging, group caps), SLO
+classes, backpressure, Jain fairness, replay traffic traces, named
+bucket validation errors, warmup accounting/memo hygiene, sim-trace
+drop accounting, and executable eviction when a scene bucket leaves
+use."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pipeline import RenderConfig
+from repro.scenes.synthetic import random_blob_scene, structured_scene
+from repro.scenes.trajectory import dolly_trajectory
+from repro.serve import (AdmissionConfig, AdmissionController,
+                         AdmissionRejected, BucketDemand, ExecutableCache,
+                         ReplayTraffic, SceneRegistry, ServeConfig, SLOClass,
+                         StreamServer, TrafficConfig, burst_trace,
+                         jain_index, skewed_trace)
+
+A, B = (256, 1), (512, 4)   # two scene buckets, as (padded N, sh K)
+
+
+def _poses(n, dx=0.0):
+    return dolly_trajectory(n, start=(dx, -0.3, -2.0),
+                            target=(0.0, 0.0, 6.0))
+
+
+def _demand(**buckets):
+    """BucketDemand map from kwargs-ish pairs: _demand(a=(pending, wait
+    is managed by the controller), ...) — values are BucketDemand
+    field dicts."""
+    return {k: BucketDemand(**v) for k, v in buckets.items()}
+
+
+# --- pure fairness math ---------------------------------------------------
+
+def test_jain_index():
+    assert jain_index([]) == 1.0
+    assert jain_index([0.0, 0.0]) == 1.0        # nothing divided = fair
+    assert jain_index([3.0, 3.0, 3.0]) == pytest.approx(1.0)
+    assert jain_index([1.0, 0.0]) == pytest.approx(0.5)       # 1/n
+    assert jain_index([4.0, 1.0]) == pytest.approx(25 / 34)
+
+
+# --- config validation ----------------------------------------------------
+
+def test_slo_and_config_validation():
+    with pytest.raises(ValueError):
+        SLOClass("bad", weight=0.0)
+    with pytest.raises(ValueError):
+        SLOClass("bad", max_wait_rounds=0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(mode="fifo")
+    with pytest.raises(ValueError):
+        AdmissionConfig(max_wait_rounds=0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(max_waiting=0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(max_groups_per_round=0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(slo_classes=(SLOClass("x"), SLOClass("x")))
+    cfg = AdmissionConfig()
+    assert cfg.slo(None).name == "standard"     # default = first class
+    assert cfg.slo("interactive").weight == 4.0
+    with pytest.raises(KeyError):
+        cfg.slo("platinum")
+
+
+def test_validate_buckets_names_offender():
+    """The validation error must blame the argument actually at fault
+    (the old message said 'r_buckets' no matter which axis failed)."""
+    with pytest.raises(ValueError, match="b_buckets"):
+        ServeConfig(b_buckets=(8, 4))
+    with pytest.raises(ValueError, match="scene_buckets"):
+        ServeConfig(scene_buckets=(512, 256))
+    with pytest.raises(ValueError, match="r_buckets"):
+        ServeConfig(r_buckets=())
+    with pytest.raises(ValueError, match="scene_buckets"):
+        SceneRegistry((512, 512))
+
+
+# --- round planning -------------------------------------------------------
+
+def test_plan_round_drain_mode():
+    ctl = AdmissionController(AdmissionConfig(mode="drain"))
+    # an in-flight (bound) bucket always wins, regardless of age/order
+    d = {A: BucketDemand(pending=2, order=0),
+         B: BucketDemand(pending=1, bound=1, order=5)}
+    assert ctl.plan_round(d) == [B]
+    # nothing bound: the oldest waiting stream's bucket, alone
+    d = {A: BucketDemand(pending=2, order=3),
+         B: BucketDemand(pending=1, order=1)}
+    assert ctl.plan_round(d) == [B]
+    assert ctl.plan_round({A: BucketDemand()}) == []
+
+
+def test_plan_round_mixed_serves_all_pending():
+    ctl = AdmissionController(AdmissionConfig())
+    d = {A: BucketDemand(pending=1, order=7),
+         B: BucketDemand(pending=2, order=2)}
+    assert set(ctl.plan_round(d)) == {A, B}     # no cap: everyone renders
+    assert ctl.plan_round(d)[0] == B            # oldest-first tiebreak
+    # SLO weight outranks arrival order
+    d[A].weight = 4.0
+    assert ctl.plan_round(d)[0] == A
+
+
+def test_plan_round_aging_beats_cap():
+    cfg = AdmissionConfig(max_wait_rounds=2, max_groups_per_round=1)
+    ctl = AdmissionController(cfg)
+    d = {A: BucketDemand(pending=5, order=0),
+         B: BucketDemand(pending=1, order=9)}
+    # round 1: cap 1, A is older -> B is skipped and ages
+    plan = ctl.plan_round(d)
+    assert plan == [A]
+    ctl.note_round(d, plan)
+    assert ctl.wait_of(B) == 1
+    # round 2: serving A again would push B's wait to 2 = the bound, so
+    # aging moves B to the front of the capped plan
+    plan = ctl.plan_round(d)
+    assert plan == [B]
+    ctl.note_round(d, plan)
+    assert ctl.wait_of(B) == 0 and ctl.max_wait[B] == 1
+    assert ctl.wait_of(A) == 1
+
+
+def test_per_class_wait_bound_tightens_aging():
+    cfg = AdmissionConfig(max_wait_rounds=4, max_groups_per_round=1)
+    ctl = AdmissionController(cfg)
+    # B carries an interactive stream: its wait bound is 1, so it ages
+    # immediately even though the config bound is 4
+    d = {A: BucketDemand(pending=5, order=0),
+         B: BucketDemand(pending=1, order=9, wait_bound=1)}
+    assert ctl.plan_round(d) == [B]
+
+
+def test_note_round_wait_clock():
+    ctl = AdmissionController(AdmissionConfig())
+    d = {A: BucketDemand(pending=1)}
+    for _ in range(3):
+        ctl.note_round(d, [])                   # pending but unserved
+    assert ctl.wait_of(A) == 3 and ctl.max_wait[A] == 3
+    ctl.note_round(d, [A])                      # served: clock resets
+    assert ctl.wait_of(A) == 0 and ctl.max_wait[A] == 3
+    ctl.note_round({A: BucketDemand(pending=0)}, [])    # queue emptied
+    assert ctl.wait_of(A) == 0
+    assert ctl.demand_rounds[A] == 4 and ctl.served_rounds[A] == 1
+    rep = ctl.report()
+    assert rep["max_wait_rounds"] == 3
+    assert rep["per_bucket"][str(A)]["share"] == 0.25
+
+
+def test_offer_backpressure_counts_deferrals():
+    ctl = AdmissionController(AdmissionConfig(max_waiting=2))
+    assert ctl.offer(0) and ctl.offer(1)
+    assert not ctl.offer(2) and not ctl.offer(5)
+    assert ctl.deferred == 2
+    unbounded = AdmissionController(AdmissionConfig())
+    assert unbounded.offer(10 ** 6)             # no bound: always admit
+
+
+def test_record_service_and_shares():
+    ctl = AdmissionController(AdmissionConfig())
+    d = {A: BucketDemand(pending=1), B: BucketDemand(pending=1)}
+    ctl.note_round(d, [A])
+    ctl.note_round(d, [A, B])
+    ctl.record_service(A, 8)
+    ctl.record_service(A, 4)
+    assert ctl.frames_served[A] == 12
+    assert ctl.shares() == {A: 1.0, B: 0.5}
+    assert ctl.report()["jain_service"] == pytest.approx(
+        round(jain_index([1.0, 0.5]), 4))
+
+
+# --- replay traffic -------------------------------------------------------
+
+def test_skewed_and_burst_traces():
+    trace = skewed_trace(22, skew=10)
+    assert [len(r) for r in trace] == [11, 11]
+    assert trace[0] == [0] * 10 + [1]           # minority arrives last
+    assert skewed_trace(5, skew=10) == [[0] * 5]    # clipped tail
+    with pytest.raises(ValueError):
+        skewed_trace(5, skew=0)
+
+    trace = burst_trace(8, burst_every=3, burst_size=4, scenes=2)
+    assert trace == [[], [], [0, 1, 0, 1], [], [], [0, 1, 0, 1]]
+    with pytest.raises(ValueError):
+        burst_trace(5, burst_size=0)
+
+
+def test_replay_traffic_protocol():
+    cfg = TrafficConfig(min_frames=4, max_frames=6, seed=3)
+    tr = ReplayTraffic([[0, 1], [], [1]], cfg)
+    assert not tr.done
+    first = tr.arrivals()
+    assert [idx for _, idx in first] == [0, 1]
+    assert all(p.shape[1:] == (4, 4) and 4 <= p.shape[0] <= 6
+               for p, _ in first)
+    assert tr.arrivals() == []                  # quiet round
+    assert [idx for _, idx in tr.arrivals()] == [1]
+    assert tr.done and tr.arrivals() == [] and tr.arrived == 3
+
+
+# --- cache eviction unit --------------------------------------------------
+
+def test_cache_evict_keys():
+    cache = ExecutableCache()
+    cache.get((A, 2), lambda: "fa")
+    cache.get((B, 2), lambda: "fb")
+    cache.get((B, 4), lambda: "fc")
+    assert cache.evict_keys(lambda k: k[0] == B) == 2
+    assert len(cache) == 1 and (A, 2) in cache and (B, 2) not in cache
+    stats = cache.stats()
+    assert stats["evicted_keys"] == 2
+    assert ("evict", (B, 4)) in cache.log
+    assert cache.evict_keys(lambda k: k[0] == B) == 0    # idempotent
+    cache.get((A, 2))                           # survivor still cached
+    assert stats["per_key_hits"] == {str((A, 2)): 0}
+
+
+# --- server-integrated satellites -----------------------------------------
+
+def test_server_attach_backpressure(small_scene, small_cam):
+    scfg = ServeConfig(slots=1, chunk=2, r_buckets=(8,),
+                       admission=AdmissionConfig(max_waiting=1))
+    srv = StreamServer(small_scene, small_cam,
+                       RenderConfig(window=3, capacity=128), scfg)
+    srv.attach(np.asarray(_poses(4)))
+    with pytest.raises(AdmissionRejected):
+        srv.attach(np.asarray(_poses(4)))
+    assert srv.try_attach(np.asarray(_poses(4))) is None
+    assert srv.streams_seen == 1                # rejected never counted
+    assert srv.admission.deferred == 2
+    with pytest.raises(KeyError):
+        srv.attach(np.asarray(_poses(4)), slo="platinum")
+
+
+def test_warmup_accumulates_and_spares_stack_memo(small_scene, small_cam):
+    """warmup() must add to warmup_seconds (not overwrite the previous
+    bill) and must not push warmup-only scene stacks through the bounded
+    ``_stacks`` memo — a mid-serving warmup would otherwise evict the
+    in-flight round's stack key."""
+    scfg = ServeConfig(slots=2, chunk=2, r_buckets=(8,))
+    srv = StreamServer(small_scene, small_cam,
+                       RenderConfig(window=3, capacity=128), scfg)
+    first = srv.warmup()
+    assert first > 0 and srv.warmup_seconds == pytest.approx(first)
+    second = srv.warmup()                       # cached: cheap, still billed
+    assert srv.warmup_seconds == pytest.approx(first + second)
+    assert srv._stacks == {}                    # memo untouched by warmup
+
+    srv.attach(np.asarray(_poses(6)))
+    srv.step()                                  # memoizes the live stack
+    live = set(srv._stacks)
+    assert live
+    srv.register_scene(
+        structured_scene(jax.random.PRNGKey(9), 600, clutter=0.4))
+    srv.step()                                  # re-memoize after register
+    live = set(srv._stacks)
+    srv.warmup()                                # compile the new bucket too
+    assert live <= set(srv._stacks)             # in-flight keys survived
+    srv.run(max_rounds=10)
+
+
+def test_sim_trace_counts_both_drop_paths(small_scene, small_cam):
+    """frames_dropped must count deque-evicted rounds AND the report-time
+    trim to sim_keep (the old code only counted the former), and
+    report() must stay idempotent."""
+    scfg = ServeConfig(slots=1, chunk=4, r_buckets=(8,),
+                       sim_latency=True, sim_keep=2)
+    srv = StreamServer(small_scene, small_cam,
+                       RenderConfig(window=3, capacity=128), scfg)
+    srv.attach(np.asarray(_poses(8)))           # 2 rounds of 4 frames
+    report = srv.run(max_rounds=10)
+    sim = report["sim"]
+    # round 1 (4 frames) evicted from the 1-round deque; round 2 trimmed
+    # from 4 frames to sim_keep=2 at report time
+    assert sim["frames"] == 2
+    assert sim["frames_dropped"] == 6
+    assert srv.report()["sim"]["frames_dropped"] == 6   # idempotent
+
+
+def test_evict_scene_purges_bucket_executables(small_cam):
+    """register -> serve -> evict across two buckets: when the last
+    scene of a bucket leaves, its executables (and batcher) go too."""
+    reg = SceneRegistry((256, 512))
+    big = reg.register(structured_scene(jax.random.PRNGKey(11), 260,
+                                        clutter=0.4))
+    blob = reg.register(random_blob_scene(jax.random.PRNGKey(12), 90))
+    scfg = ServeConfig(slots=1, chunk=2, r_buckets=(8,),
+                       scene_buckets=(256, 512))
+    srv = StreamServer(reg, small_cam,
+                       RenderConfig(window=3, capacity=128), scfg)
+    for e in (big, blob):
+        srv.attach(np.asarray(_poses(4)), scene_id=e.scene_id)
+    report = srv.run(max_rounds=20)
+    assert report["streams_finished"] == 2
+    assert report["cache"]["distinct_executables"] == 2
+    assert set(srv._batchers) == {big.bucket, blob.bucket}
+
+    srv.evict_scene(blob.scene_id)              # bucket (256, 1) empties
+    stats = srv.cache.stats()
+    assert stats["distinct_executables"] == 1
+    assert stats["evicted_keys"] == 1
+    assert set(srv._batchers) == {big.bucket}
+    # the surviving bucket's executable still serves without recompiling
+    misses = srv.cache.misses
+    srv.attach(np.asarray(_poses(2)), scene_id=big.scene_id)
+    srv.run(max_rounds=10)
+    assert srv.cache.misses == misses

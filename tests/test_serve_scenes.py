@@ -17,9 +17,10 @@ from repro.core import engine
 from repro.core.pipeline import RenderConfig, render_full_frame
 from repro.scenes.synthetic import random_blob_scene, structured_scene
 from repro.scenes.trajectory import dolly_trajectory
-from repro.serve import (BucketPolicy, ContinuousBatcher, SceneRegistry,
-                         ServeConfig, SessionManager, StreamServer,
-                         pad_scene, snap_scene_bucket, suggest_buckets)
+from repro.serve import (AdmissionConfig, BucketPolicy, ContinuousBatcher,
+                         SceneRegistry, ServeConfig, SessionManager,
+                         StreamServer, pad_scene, snap_scene_bucket,
+                         suggest_buckets)
 
 _RECORD_FIELDS = ("is_full", "n_gaussians", "candidate_pairs", "raw_pairs",
                   "sort_pairs", "raster_pairs", "active",
@@ -361,9 +362,11 @@ def test_sharded_multi_scene_matches_single_device():
 
 
 def test_server_bucket_isolation_and_reuse(small_cam):
-    """Scenes in different (N, K) buckets are served in separate rounds
-    through separate executables; same-bucket scenes share one. The
-    cache never compiles more than one executable per key."""
+    """Scenes in different (N, K) buckets are served in separate slot
+    GROUPS — each group single-bucket through its own executable, but a
+    ragged round may dispatch both groups together (DESIGN.md §11) —
+    while same-bucket scenes share one executable. The cache never
+    compiles more than one executable per key."""
     reg = SceneRegistry((256, 512))
     same_a, same_b = [reg.register(s) for s in _scenes(2)]
     blob = reg.register(random_blob_scene(jax.random.PRNGKey(5), 90))
@@ -378,7 +381,64 @@ def test_server_bucket_isolation_and_reuse(small_cam):
     # one executable per scene bucket (B and R are single-bucket here)
     assert report["cache"]["distinct_executables"] == 2
     assert report["cache"]["hits"] >= 1     # same-bucket scenes reused one
-    # no round mixed buckets
+    # every GROUP is single-bucket (the stackability invariant) ...
     for r in report["rounds_trace"]:
-        ids = r.get("scene_ids", [])
-        assert len({reg.bucket_of(i) for i in ids} if ids else set()) <= 1
+        for g in r.get("groups", []):
+            buckets = {reg.bucket_of(i) for i in g["scene_ids"]}
+            assert buckets <= {tuple(g["scene_bucket"])}
+    # ... and with both buckets demanding from round one, the default
+    # (mixed, uncapped) planner actually mixed them in one round.
+    assert any(len(r.get("groups", [])) > 1
+               for r in report["rounds_trace"])
+
+
+def test_server_skew_starvation_bounded_wait(small_cam):
+    """The starvation regression (the bug this PR fixes): 10:1 stream
+    skew across two scene buckets with ``max_groups_per_round=1`` (the
+    worst case — only one bucket can render per round). Aging must bound
+    the minority bucket's wait by ``max_wait_rounds``, every stream must
+    finish, and the mixed-round frames must match solo renders exactly
+    (the scheduler moves WHEN a stream renders, never WHAT it renders).
+    """
+    reg = SceneRegistry((256, 512))
+    major = reg.register(_scenes(1)[0])                        # (512, 4)
+    minor = reg.register(random_blob_scene(jax.random.PRNGKey(7), 90))
+    cfg = RenderConfig(window=3, capacity=128, rerender_capacity=8)
+    scfg = ServeConfig(chunk=2, r_buckets=(8,), b_buckets=(2, 4),
+                       scene_buckets=(256, 512), collect_frames=True,
+                       admission=AdmissionConfig(max_wait_rounds=2,
+                                                 max_groups_per_round=1))
+    srv = StreamServer(reg, small_cam, cfg, scfg)
+
+    total = 4
+    majors = [srv.attach(np.asarray(_poses(total, dx=0.04 * i)),
+                         scene_id=major.scene_id) for i in range(10)]
+    minority = srv.attach(np.asarray(_poses(total, dx=-0.2)),
+                          scene_id=minor.scene_id)
+    report = srv.run(max_rounds=60)
+    assert report["streams_finished"] == 11
+
+    # the wait bound held for EVERY bucket, lifetime max
+    assert report["fairness"]["max_wait_rounds"] <= 2
+    minority_stats = report["per_bucket"][str(minor.bucket)]
+    assert minority_stats["frames"] == total
+    assert minority_stats["max_wait_rounds"] <= 2
+    assert minority_stats["served_rounds"] >= 1
+    assert 0.0 < minority_stats["share"] <= 1.0
+    assert 0.0 < report["fairness"]["jain_service"] <= 1.0
+    # one-bucket-per-round cap respected
+    assert all(len(r.get("groups", [])) <= 1
+               for r in report["rounds_trace"])
+    # compile bound: <= policy.max_keys per bucket in use (2 B x 1 R x 2)
+    assert report["cache"]["distinct_executables"] <= 4
+
+    # scheduling changed WHEN, not WHAT: bit-parity vs solo renders
+    for sess, entry in ((minority, minor), (majors[0], major)):
+        got = np.concatenate(sess.frames)
+        solo = engine.render_trajectory(
+            entry.scene, small_cam,
+            jnp.asarray(_poses(total, dx=-0.2 if sess is minority
+                               else 0.0)),
+            cfg, phase=sess.phase)
+        np.testing.assert_allclose(got, np.asarray(solo.frames),
+                                   atol=1e-5)
