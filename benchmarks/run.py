@@ -13,7 +13,7 @@ import os
 import time
 
 BENCHES = ("intersection", "warp_quality", "window_sweep", "ablation",
-           "accelerator", "wallclock", "serve_bench")
+           "accelerator", "wallclock", "serve_bench", "cull_ablation")
 
 
 def main() -> None:

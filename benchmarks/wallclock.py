@@ -18,16 +18,19 @@ from __future__ import annotations
 import functools
 import json
 import os
-from typing import List
+from typing import List, Sequence
 
 import jax
+import numpy as np
 
 from benchmarks.common import camera, scenes, timed, trajectory
 from repro.core import binning, intersect, projection
 from repro.core.engine import render_streams
+from repro.core.metrics import psnr, ssim
 from repro.core.pipeline import (RenderConfig, render_full_frame,
                                  render_sparse_frame, render_trajectory,
                                  render_trajectory_py)
+from repro.core.plan import rerender_demand
 from repro.kernels import ops as kops
 
 N_TRAJ_FRAMES = 8
@@ -44,6 +47,79 @@ _PALLAS_ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
 # serve-layer's largest default bucket.
 FUSED_K = 256
 FUSED_R = 32
+# Contribution-culling ablation thresholds (DESIGN.md §12): blend mass
+# summed over a tile's pixels (so up to ~pixels-per-tile for an opaque
+# splat). 0.05 trims only the near-invisible tail; 2.0 removes ~4% of
+# the sort workload on the bench orbit while every sparse frame stays
+# above 35 dB PSNR vs uncull.
+CULL_THRESHOLDS = (0.05, 0.5, 2.0)
+
+
+def cull_ablation_rows(scene, cam, poses,
+                       thresholds: Sequence[float] = CULL_THRESHOLDS, *,
+                       window: int = 4, rerender_capacity: int = 36,
+                       capacity: int = 256) -> List[dict]:
+    """Threshold x quality/work sweep for contribution culling.
+
+    Renders the same trajectory at ``cull_threshold = 0`` (the bit-exact
+    reference) and at each nonzero threshold, then reports per-row: mean
+    and worst sparse-frame PSNR/SSIM against the uncull frames
+    (core/metrics.py), total sort pairs, the sparse-frame re-render
+    demand (``plan.rerender_demand`` — the statistic the serve layer's
+    ``suggest_capacity`` quantiles), and the culled-pair count. Emitted
+    by ``benchmarks/cull_ablation.py`` (also the CI ``--smoke`` entry),
+    not by ``run()`` here, so re-running either bench replaces only its
+    own rows in bench_results.json.
+    """
+    f = poses.shape[0]
+    per_frame = 1e6 / f
+
+    def run_cfg(th):
+        cfg = RenderConfig(window=window, capacity=capacity,
+                           rerender_capacity=rerender_capacity,
+                           cull_threshold=th)
+        res = render_trajectory(scene, cam, poses, cfg)
+        # One timed iteration: the rows' headline is quality-vs-work;
+        # wall clock rides along without tripling the sweep's cost.
+        t_call = timed(lambda: render_trajectory(scene, cam, poses,
+                                                 cfg).frames, iters=1)
+        return res, t_call
+
+    base, t_base = run_cfg(0.0)
+    sparse = ~np.asarray(base.records.is_full)
+
+    def work(res):
+        sort_pairs = int(np.asarray(res.records.sort_pairs).sum())
+        demand = int(np.asarray(rerender_demand(
+            res.records.active, res.records.overflow_tiles))[sparse].sum())
+        culled = int(np.asarray(res.records.culled_pairs).sum())
+        return sort_pairs, demand, culled
+
+    sp0, dm0, _ = work(base)
+    rows = [{"bench": "cull_ablation", "stage": "uncull", "threshold": 0.0,
+             "sort_pairs": sp0, "rerender_demand": dm0, "culled_pairs": 0,
+             "us_per_call": round(t_base * per_frame, 1),
+             "derived": "threshold-0 reference (bit-exact with default)"}]
+    for th in thresholds:
+        res, t_th = run_cfg(th)
+        sp, dm, cl = work(res)
+        ps = [float(psnr(res.frames[i], base.frames[i]))
+              for i in range(f) if sparse[i]]
+        ss = [float(ssim(res.frames[i], base.frames[i]))
+              for i in range(f) if sparse[i]]
+        rows.append({
+            "bench": "cull_ablation", "stage": f"threshold_{th}",
+            "threshold": th,
+            "psnr_db": round(float(np.mean(ps)), 2),
+            "psnr_min_db": round(float(np.min(ps)), 2),
+            "ssim": round(float(np.mean(ss)), 4),
+            "sort_pairs": sp, "sort_pairs_uncull": sp0,
+            "rerender_demand": dm, "rerender_demand_uncull": dm0,
+            "culled_pairs": cl,
+            "us_per_call": round(t_th * per_frame, 1),
+            "derived": f"sparse-frame quality vs uncull; "
+                       f"sort_pairs {sp0}->{sp}, demand {dm0}->{dm}"})
+    return rows
 
 
 def _plan_compaction_rows(scene, cam, poses) -> List[dict]:

@@ -76,7 +76,8 @@ import jax.numpy as jnp
 from repro.core.camera import Camera
 from repro.core.pipeline import (FrameRecord, FrameState, RenderConfig,
                                  StackedRecords, TrajectoryResult,
-                                 render_full_frame, render_sparse_frame)
+                                 contrib_enabled, render_full_frame,
+                                 render_sparse_frame)
 
 
 class EngineCarry(NamedTuple):
@@ -96,31 +97,46 @@ class StreamsResult(NamedTuple):
     carries: EngineCarry        # final per-stream carries, fields (B, ...)
 
 
-def _zero_state(cam: Camera) -> FrameState:
-    """Shape/dtype-correct placeholder state for step 0 (always full)."""
+def _zero_state(cam: Camera,
+                n_gaussians: Optional[int] = None) -> FrameState:
+    """Shape/dtype-correct placeholder state for step 0 (always full).
+
+    ``n_gaussians`` sizes the contribution-prior leaf when the config
+    threads it (``pipeline.contrib_enabled``); the inf fill is the
+    keep-all prior, and frame 0 is always full so it is never read.
+    """
     h, w = cam.height, cam.width
+    contrib = None if n_gaussians is None \
+        else jnp.full((n_gaussians,), jnp.inf, jnp.float32)
     return FrameState(
         rgb=jnp.zeros((h, w, 3), jnp.float32),
         exp_depth=jnp.zeros((h, w), jnp.float32),
         trunc_depth=jnp.zeros((h, w), jnp.float32),
         source_mask=jnp.zeros((h, w), bool),
-        frame_idx=jnp.int32(0))
+        frame_idx=jnp.int32(0),
+        contrib=contrib)
 
 
-def init_carry(cam: Camera, pose: jax.Array) -> EngineCarry:
+def init_carry(cam: Camera, pose: jax.Array,
+               n_gaussians: Optional[int] = None) -> EngineCarry:
     """Fresh stream carry: zero state at global step 0 (first frame full).
 
     ``pose`` seeds ``prev_pose``; frame 0 is always a full render, so the
     warp never reads it — any valid (4, 4) world-to-camera works.
+    ``n_gaussians`` (the scene's Gaussian count) is required exactly when
+    ``pipeline.contrib_enabled(cfg)`` — it sizes the carried prior so the
+    carry's pytree structure matches the scan body's output.
     """
-    return EngineCarry(state=_zero_state(cam),
+    return EngineCarry(state=_zero_state(cam, n_gaussians),
                        prev_pose=jnp.asarray(pose, jnp.float32),
                        step=jnp.int32(0))
 
 
-def init_stream_carries(cam: Camera, poses_batch: jax.Array) -> EngineCarry:
+def init_stream_carries(cam: Camera, poses_batch: jax.Array,
+                        n_gaussians: Optional[int] = None) -> EngineCarry:
     """Batched fresh carries, fields (B, ...), one per stream slot."""
-    return jax.vmap(lambda p: init_carry(cam, p))(poses_batch[:, 0])
+    return jax.vmap(lambda p: init_carry(cam, p, n_gaussians))(
+        poses_batch[:, 0])
 
 
 def _mask_record(rec: FrameRecord, keep: jax.Array) -> FrameRecord:
@@ -141,7 +157,10 @@ def _mask_record(rec: FrameRecord, keep: jax.Array) -> FrameRecord:
         overflow_tiles=m(rec.overflow_tiles, 0),
         block_of_tile=m(rec.block_of_tile, -1),
         order_in_block=m(rec.order_in_block, 0),
-        block_load=m(rec.block_load, 0))
+        block_load=m(rec.block_load, 0),
+        culled_pairs=m(rec.culled_pairs, 0),
+        lane_contrib=None if rec.lane_contrib is None
+        else m(rec.lane_contrib, 0.0))
 
 
 def make_frame_step(scene, cam: Camera, cfg: RenderConfig,
@@ -181,11 +200,18 @@ def make_frame_step(scene, cam: Camera, cfg: RenderConfig,
     return frame_step
 
 
+def _scene_n(scene, cfg: RenderConfig) -> Optional[int]:
+    """Gaussian count for carry init, or None when priors are off.
+
+    Works on single (N, ...) and stacked (S, N, ...) scene pytrees."""
+    return scene.means.shape[-2] if contrib_enabled(cfg) else None
+
+
 def _scan_core(scene, cam: Camera, poses: jax.Array, phase: jax.Array,
                cfg: RenderConfig, keep_states: bool):
     step_fn = make_frame_step(scene, cam, cfg, phase)
-    init = EngineCarry(state=_zero_state(cam), prev_pose=poses[0],
-                       step=jnp.int32(0))
+    init = EngineCarry(state=_zero_state(cam, _scene_n(scene, cfg)),
+                       prev_pose=poses[0], step=jnp.int32(0))
 
     def body(carry, pose):
         new_carry, (rgb, rec) = step_fn(carry, pose)
@@ -335,7 +361,8 @@ def render_streams(scene, cam: Camera, poses_batch: jax.Array,
         counts = jnp.full((b,), f, jnp.int32)
     counts = jnp.asarray(counts, jnp.int32)
     if carries is None:
-        carries = init_stream_carries(cam, poses_batch)
+        carries = init_stream_carries(cam, poses_batch,
+                                      _scene_n(scene, cfg))
     if slot_scene is not None:
         carry_end, (frames, recs, active) = _scan_streams_scenes(
             scene, cam, poses_batch, counts, phases, carries,

@@ -30,7 +30,7 @@ from typing import NamedTuple, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core import binning, intersect, warp as warp_mod
+from repro.core import binning, culling, intersect, warp as warp_mod
 from repro.core import plan as plan_mod
 from repro.core.camera import TILE, Camera
 from repro.core.plan import TilePlan
@@ -58,6 +58,26 @@ class RenderConfig:
     min_coverage: float = warp_mod.MIN_COVERAGE
     rerender_capacity: Optional[int] = None  # R: static cap on plan slots
     ldu_blocks: int = 32                # B: parallel raster blocks (LDU)
+    # Temporal contribution culling (core/culling.py, DESIGN.md §12): on
+    # sparse frames, drop intersection pairs whose Gaussian contributed
+    # < cull_threshold blend mass at the last key frame, before binning.
+    # 0.0 = the pass is structurally skipped (bit-exact baseline).
+    cull_threshold: float = 0.0
+    # Populate FrameRecord.lane_contrib / FrameState.contrib even with
+    # culling off (e.g. to inspect the 0.0 baseline's statistics). The
+    # machinery is always on when cull_threshold > 0.
+    record_contrib: bool = False
+
+
+def contrib_enabled(cfg: RenderConfig) -> bool:
+    """Static switch: is the contribution/prior machinery threaded?
+
+    When False (the default), ``FrameState.contrib``,
+    ``PlanStats.gauss_prior`` and ``FrameRecord.lane_contrib`` stay
+    ``None`` — absent from the pytree — so carries, records and compiled
+    executables are structurally identical to the pre-culling pipeline.
+    """
+    return cfg.cull_threshold > 0.0 or cfg.record_contrib
 
 
 class FrameState(NamedTuple):
@@ -68,6 +88,10 @@ class FrameState(NamedTuple):
     trunc_depth: jax.Array  # (H, W)
     source_mask: jax.Array  # (H, W) bool — usable reprojection sources
     frame_idx: jax.Array    # () int32 — true global frame index
+    # Key-frame per-Gaussian contribution prior (inf = not considered at
+    # the key frame). None unless ``contrib_enabled(cfg)`` — a None leaf
+    # vanishes from the pytree, keeping default-path carries unchanged.
+    contrib: Optional[jax.Array] = None  # (N,) float32
 
 
 class FrameRecord(NamedTuple):
@@ -86,6 +110,10 @@ class FrameRecord(NamedTuple):
     block_of_tile: jax.Array    # (T,) int32 — device-LDU block (-1 = none)
     order_in_block: jax.Array   # (T,) int32 — light-to-heavy position
     block_load: jax.Array       # (B,) int32 — predicted pairs per block
+    culled_pairs: jax.Array     # () int32 — pairs removed by culling
+    # Per-(tile, lane) blend contribution in bin lane order (DESIGN.md
+    # §12); None unless ``contrib_enabled(cfg)``.
+    lane_contrib: Optional[jax.Array] = None  # (T, K) float32
 
 
 class PlanStats(NamedTuple):
@@ -94,6 +122,10 @@ class PlanStats(NamedTuple):
     candidate_pairs: jax.Array  # () int32 — stage-2 candidates on the plan
     raw_slots: jax.Array        # (R,) pre-DPES pairs per slot
     overflow_pairs: jax.Array   # () int32 — bin-capacity overflow
+    culled_pairs: jax.Array     # () int32 — pairs removed by culling
+    # Per-Gaussian contribution with inf where not considered — what key
+    # frames store as FrameState.contrib. None unless contrib_enabled.
+    gauss_prior: Optional[jax.Array] = None  # (N,) float32
 
 
 def _tile_flag_to_pixels(flag: jax.Array, tiles_x: int, tiles_y: int):
@@ -105,17 +137,28 @@ def _tile_flag_to_pixels(flag: jax.Array, tiles_x: int, tiles_y: int):
 
 def render_planned_frame(scene, cam: Camera, plan: TilePlan,
                          cfg: RenderConfig, *,
-                         dpes_depth: Optional[jax.Array] = None
+                         dpes_depth: Optional[jax.Array] = None,
+                         cull_prior: Optional[jax.Array] = None,
+                         cull_gate: Optional[jax.Array] = None
                          ) -> Tuple[RenderOutput, TilePlan, "jax.Array",
                                     PlanStats]:
     """The ONE shared stage pipeline every frame renders through.
 
-    preprocess -> intersect against the plan's R slots -> (R, K) compacted
-    binning (with per-slot DPES depth limits) -> device-LDU schedule over
-    the slots -> raster the slots -> scatter back to the (H, W) frame.
+    preprocess -> intersect against the plan's R slots -> contribution
+    cull -> (R, K) compacted binning (with per-slot DPES depth limits) ->
+    device-LDU schedule over the slots -> raster the slots -> scatter
+    back to the (H, W) frame.
 
     dpes_depth: optional (T,) per-tile early-stop depth (inf = no prior);
     gathered to the plan's slots before binning.
+
+    cull_prior: optional (N,) key-frame contribution prior (inf = not
+    considered); with ``cfg.cull_threshold > 0`` low-contribution pairs
+    are removed before binning in slots passed by ``cull_gate`` ((T,)
+    bool, default all-True), and fully-culled slots are demoted to
+    interpolation (core/culling.py). With the default threshold 0.0 the
+    pass is structurally absent and the pipeline is bit-exact with the
+    pre-culling code.
 
     Returns ``(out, plan, n_gaussians, stats)`` where ``out`` is the
     full-frame RenderOutput (unplanned tiles empty), ``plan`` now carries
@@ -136,6 +179,15 @@ def render_planned_frame(scene, cam: Camera, plan: TilePlan,
     candidate_pairs = jnp.sum(
         (cand_src & plan.slot_active[None, :]).astype(jnp.int32))
     mask = mask & plan.slot_active[None, :]
+    if cfg.cull_threshold > 0.0 and cull_prior is not None:
+        gate = cull_gate if cull_gate is not None \
+            else jnp.ones((cam.num_tiles,), bool)
+        mask, slot_active, culled_pairs = culling.cull_pairs(
+            mask, plan.slot_active, plan.tile_ids, cull_prior, gate,
+            cfg.cull_threshold)
+        plan = plan._replace(slot_active=slot_active)
+    else:
+        culled_pairs = jnp.int32(0)
     raw_slots = jnp.sum(mask.astype(jnp.int32), axis=0)
 
     limit = None
@@ -151,8 +203,18 @@ def render_planned_frame(scene, cam: Camera, plan: TilePlan,
     out = render_plan_slots(proj, bins, slots.origins, plan.tile_ids, grid,
                             impl=cfg.impl, chunk=cfg.chunk,
                             slot_active=plan.slot_active)
+    gauss_prior = None
+    if contrib_enabled(cfg):
+        # A Gaussian was "considered" if it occupies a valid bin lane
+        # anywhere on the plan; everyone else gets inf (= always keep) so
+        # Gaussians outside this frame's view are never culled later.
+        n = proj.depth.shape[0]
+        considered = jnp.zeros((n,), jnp.int32).at[bins.indices].add(
+            bins.valid.astype(jnp.int32)) > 0
+        gauss_prior = jnp.where(considered, out.gauss_contrib, jnp.inf)
     stats = PlanStats(candidate_pairs=candidate_pairs, raw_slots=raw_slots,
-                      overflow_pairs=jnp.sum(bins.overflow))
+                      overflow_pairs=jnp.sum(bins.overflow),
+                      culled_pairs=culled_pairs, gauss_prior=gauss_prior)
     n_gaussians = jnp.sum(proj.valid.astype(jnp.int32))
     return out, plan, n_gaussians, stats
 
@@ -177,7 +239,13 @@ def _plan_record(plan: TilePlan, stats: PlanStats, out: RenderOutput,
         overflow_tiles=plan.overflow_tiles,
         block_of_tile=scat(plan.block_of, fill=-1),
         order_in_block=scat(plan.order_in_block),
-        block_load=plan_mod.block_loads(plan, cfg.ldu_blocks))
+        block_load=plan_mod.block_loads(plan, cfg.ldu_blocks),
+        culled_pairs=stats.culled_pairs,
+        # Slot-shaped (R, K) from render_plan_slots -> (T, K) per-tile;
+        # gated so the dense view only exists when the record wants it
+        # (sparse compiles stay plan-shaped otherwise).
+        lane_contrib=scat(out.lane_contrib) if contrib_enabled(cfg)
+        else None)
 
 
 def render_full_frame(scene, cam: Camera, cfg: RenderConfig,
@@ -197,7 +265,8 @@ def render_full_frame(scene, cam: Camera, cfg: RenderConfig,
     state = FrameState(
         rgb=out.rgb, exp_depth=out.exp_depth, trunc_depth=out.trunc_depth,
         source_mask=coverage > cfg.min_coverage,
-        frame_idx=jnp.asarray(frame_idx, jnp.int32))
+        frame_idx=jnp.asarray(frame_idx, jnp.int32),
+        contrib=stats.gauss_prior)
     rec = _plan_record(tplan, stats, out, n_gaussians, cam.num_tiles, cfg,
                        is_full=True, tiles_interpolated=jnp.int32(0))
     return out, state, rec
@@ -220,8 +289,11 @@ def render_sparse_frame(scene, ref_cam: Camera, tgt_cam: Camera,
 
     limit = jnp.where(jnp.isfinite(w.dpes_depth), w.dpes_depth, jnp.inf) \
         if cfg.use_dpes else None
+    gate = culling.warp_gate(w.valid_per_tile) \
+        if cfg.cull_threshold > 0.0 else None
     out, tplan, n_gaussians, stats = render_planned_frame(
-        scene, tgt_cam, tplan, cfg, dpes_depth=limit)
+        scene, tgt_cam, tplan, cfg, dpes_depth=limit,
+        cull_prior=state.contrib, cull_gate=gate)
     # Effective re-render set: plan slots that survived compaction.
     rerender = plan_mod.scatter_slots(tplan, tplan.slot_active,
                                       num_tiles=tgt_cam.num_tiles,
@@ -250,9 +322,11 @@ def render_sparse_frame(scene, ref_cam: Camera, tgt_cam: Camera,
     else:
         src = jnp.where(rr_px, coverage_ok,
                         w.filled | interpolated_px)
+    # Priors refresh only at key frames; sparse frames carry them through.
     new_state = FrameState(rgb=rgb_final, exp_depth=exp_depth,
                            trunc_depth=trunc_depth, source_mask=src,
-                           frame_idx=state.frame_idx + 1)
+                           frame_idx=state.frame_idx + 1,
+                           contrib=state.contrib)
     rec = _plan_record(
         tplan, stats, out, n_gaussians, tgt_cam.num_tiles, cfg,
         is_full=False,

@@ -131,9 +131,16 @@ def rerender_demand(active, overflow_tiles):
     have used. Works on stacked ``(F, ..., T)`` record arrays (jnp or
     numpy); the serving layer's ``serve.cache.suggest_capacity`` feeds
     quantiles of this into the bucketed-R executable choice.
+
+    Dtype contract: the result is always int32 regardless of the inputs'
+    dtypes (``overflow_tiles`` records arrive as whatever the engine
+    stacked — int32 on device, sometimes int64/float via numpy on host),
+    so host callers can read it with ``np.asarray`` and compare against
+    bucket sizes without silent float truncation. Demand can never be
+    negative, and T caps each frame's count, so int32 cannot overflow.
     """
-    return jnp.sum(jnp.asarray(active).astype(jnp.int32), axis=-1) \
-        + jnp.asarray(overflow_tiles)
+    return (jnp.sum(jnp.asarray(active).astype(jnp.int32), axis=-1)
+            + jnp.asarray(overflow_tiles).astype(jnp.int32))
 
 
 def block_loads(plan: TilePlan, num_blocks: int) -> jax.Array:

@@ -31,6 +31,17 @@ class RenderOutput(NamedTuple):
     exp_depth: jax.Array    # (H, W) opacity-weighted depth (Sec. IV-A)
     trunc_depth: jax.Array  # (H, W) early-stop depth (Sec. IV-B)
     processed_pairs: jax.Array  # (T,) pairs traversed per tile (raster work)
+    # Temporal-prior contribution statistics (DESIGN.md §12). Per (bin
+    # row, lane): the sum of blend weights over the tile's pixels, in bin
+    # lane order (0 past the count / for inactive slots). Rows follow the
+    # call's bin layout — dense (T, K) from ``render_from_bins``, plan
+    # slots (R, K) from ``render_plan_slots`` (so sparse frames stay
+    # R-shaped; ``pipeline._plan_record`` scatters to (T, K) only when
+    # the record asks for it). Per Gaussian: the same mass scatter-added
+    # over the bin indices — what key frames store as the culling prior.
+    # The oracle leaves both zeroed.
+    lane_contrib: jax.Array     # (rows, K) float32
+    gauss_contrib: jax.Array    # (N,) float32
 
 
 def untile(tiles: jax.Array, tiles_x: int, tiles_y: int) -> jax.Array:
@@ -49,11 +60,22 @@ def tile_view(img: jax.Array, tiles_x: int, tiles_y: int) -> jax.Array:
     return x.reshape(tiles_y * tiles_x, TILE, TILE, *extra)
 
 
+def _gauss_contrib(proj: ProjectedGaussians, bins: binning.TileBins,
+                   lane_contrib: jax.Array) -> jax.Array:
+    """(rows, K) per-lane contributions -> (N,) per-Gaussian totals.
+
+    Invalid lanes contribute exactly 0 (their opacity is zeroed by
+    ``gather_tiles``), so the scatter-add needs no validity mask.
+    """
+    n = proj.depth.shape[0]
+    return jnp.zeros((n,), jnp.float32).at[bins.indices].add(lane_contrib)
+
+
 def render_from_bins(proj: ProjectedGaussians, bins: binning.TileBins,
                      grid: TileGrid, *, impl: str = "jnp_chunked",
                      chunk: int = 64) -> RenderOutput:
     tg = binning.gather_tiles(proj, bins)
-    rgb_t, trans_t, d_t, td_t, proc = kops.raster_tiles(
+    rgb_t, trans_t, d_t, td_t, proc, contrib = kops.raster_tiles(
         tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
         grid.origins, bins.count, impl=impl, chunk=chunk)
     return RenderOutput(
@@ -61,7 +83,9 @@ def render_from_bins(proj: ProjectedGaussians, bins: binning.TileBins,
         transmittance=untile(trans_t, grid.tiles_x, grid.tiles_y),
         exp_depth=untile(d_t, grid.tiles_x, grid.tiles_y),
         trunc_depth=untile(td_t, grid.tiles_x, grid.tiles_y),
-        processed_pairs=proc)
+        processed_pairs=proc,
+        lane_contrib=contrib,
+        gauss_contrib=_gauss_contrib(proj, bins, contrib))
 
 
 def render_plan_slots(proj: ProjectedGaussians, bins: binning.TileBins,
@@ -80,7 +104,7 @@ def render_plan_slots(proj: ProjectedGaussians, bins: binning.TileBins,
     win comes from on real hardware.
     """
     tg = binning.gather_tiles(proj, bins)
-    rgb_s, trans_s, d_s, td_s, proc = kops.raster_tiles(
+    rgb_s, trans_s, d_s, td_s, proc, contrib_s = kops.raster_tiles(
         tg.mean2d, tg.conic, tg.rgb, tg.opacity, tg.depth,
         slot_origins, bins.count, impl=impl, chunk=chunk,
         slot_active=slot_active)
@@ -95,7 +119,9 @@ def render_plan_slots(proj: ProjectedGaussians, bins: binning.TileBins,
         transmittance=untile(trans_all, grid.tiles_x, grid.tiles_y),
         exp_depth=untile(d_all, grid.tiles_x, grid.tiles_y),
         trunc_depth=untile(td_all, grid.tiles_x, grid.tiles_y),
-        processed_pairs=proc_all)
+        processed_pairs=proc_all,
+        lane_contrib=contrib_s,
+        gauss_contrib=_gauss_contrib(proj, bins, contrib_s))
 
 
 def render_oracle(proj: ProjectedGaussians, cam: Camera) -> RenderOutput:
@@ -150,4 +176,6 @@ def render_oracle(proj: ProjectedGaussians, cam: Camera) -> RenderOutput:
         rgb=color.reshape(h, w, 3), transmittance=trans.reshape(h, w),
         exp_depth=(dacc / jnp.maximum(wacc, 1e-8)).reshape(h, w),
         trunc_depth=tdepth.reshape(h, w),
-        processed_pairs=jnp.zeros((n_tiles,), jnp.int32))
+        processed_pairs=jnp.zeros((n_tiles,), jnp.int32),
+        lane_contrib=jnp.zeros((n_tiles, 1), jnp.float32),
+        gauss_contrib=jnp.zeros((n,), jnp.float32))

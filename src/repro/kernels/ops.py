@@ -77,7 +77,11 @@ def _raster_tile_chunked_jnp(mean2d, conic, rgb, opacity, depth, origin,
         t_run = jnp.min(jnp.where(blend, tp, t_run[:, None]), axis=1)
         done = done | (tp[:, -1] < T_EPS)
         n_alive = n_alive + alive.astype(jnp.int32)
-        return (c_acc, t_run, done, d_acc, w_acc, td_max, n_alive), None
+        # Per-lane blend contribution: sum of w over the tile's pixels —
+        # identical math to the fused kernel's accumulator, so the two
+        # impls agree bit-for-bit on matching inputs.
+        return (c_acc, t_run, done, d_acc, w_acc, td_max, n_alive), \
+            jnp.sum(w, axis=0)
 
     n_chunks = k // chunk
     xs = {
@@ -89,27 +93,33 @@ def _raster_tile_chunked_jnp(mean2d, conic, rgb, opacity, depth, origin,
     }
     init = (jnp.zeros((p, 3)), jnp.ones((p,)), jnp.zeros((p,), bool),
             jnp.zeros((p,)), jnp.zeros((p,)), jnp.zeros((p,)), jnp.int32(0))
-    (c_acc, t_run, done, d_acc, w_acc, td_max, n_alive), _ = jax.lax.scan(
-        body, init, xs)
+    (c_acc, t_run, done, d_acc, w_acc, td_max, n_alive), contrib = \
+        jax.lax.scan(body, init, xs)
     processed = jnp.minimum(n_alive * chunk, count).astype(jnp.int32)
     return (c_acc.reshape(tile, tile, 3), t_run.reshape(tile, tile),
             (d_acc / jnp.maximum(w_acc, 1e-8)).reshape(tile, tile),
-            td_max.reshape(tile, tile), processed)
+            td_max.reshape(tile, tile), processed, contrib.reshape(k))
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "chunk", "tile"))
 def raster_tiles(mean2d, conic, rgb, opacity, depth, origins, counts,
                  *, impl: str = "jnp_chunked", chunk: int = 64,
                  tile: int = TILE, slot_active=None):
-    """Rasterize a batch of tiles: inputs (R, K, ...) -> 5 outputs.
+    """Rasterize a batch of tiles: inputs (R, K, ...) -> 6 outputs.
 
     The leading axis is whatever tile set the caller planned — all T
     tiles on the dense path, or a TilePlan's R compacted slots (the
     production path in core/pipeline.py, where raster cost scales with
     the re-render slot count). Returns (rgb, transmittance,
-    expected_depth, truncated_depth, processed_pairs) — the last is (R,)
-    int32 pairs traversed before the early-stop exit (chunk-granular for
-    pallas/jnp_chunked, exact for ref).
+    expected_depth, truncated_depth, processed_pairs, lane_contrib):
+    ``processed_pairs`` is (R,) int32 pairs traversed before the
+    early-stop exit (chunk-granular for pallas/jnp_chunked, exact for
+    ref); ``lane_contrib`` is (R, K) float32 per-lane blend contribution
+    — the sum of blend weights ``alpha * T_before`` over the tile's
+    pixels, reported in INPUT lane order on every impl (the fused kernel
+    unscrambles its in-kernel sort), exactly 0 for padding / masked /
+    never-blended lanes. It is the temporal-prior statistic
+    ``core/culling.py`` thresholds on (DESIGN.md §12).
 
     ``slot_active`` (R,) bool is the TilePlan slot mask, consumed only by
     ``impl="pallas_fused"`` (masked slots skip the in-kernel sort).

@@ -22,9 +22,11 @@ a ``lax.cond`` on ``slot_active & (count > 0)`` and the blend
 ``while_loop`` runs zero chunks, so a sparse plan's padded slots write
 their empty outputs (rgb 0, T = 1) and move on.
 
-VMEM footprint per slot at K=1024: 10 attr lanes * 4B * K = 40 KiB
-resident, plus the (256 pixels x G-chunk) blend intermediates — same
-budget as raster_tile.py, the sort works in-place on the resident lanes.
+VMEM footprint per slot at K=1024: 11 attr lanes (10 attributes + the
+original lane index riding the sort for the contribution unscramble)
+* 4B * K = 44 KiB resident, plus the (256 pixels x G-chunk) blend
+intermediates — same budget as raster_tile.py, the sort works in-place
+on the resident lanes.
 """
 from __future__ import annotations
 
@@ -41,7 +43,7 @@ from repro.kernels.raster_tile import ALPHA_MAX, ALPHA_MIN, T_EPS
 def _fused_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
                   origin_ref, count_ref, active_ref,
                   rgb_out, trans_out, depth_out, tdepth_out, processed_out,
-                  *, k: int, chunk: int, tile: int):
+                  contrib_out, srclane_out, *, k: int, chunk: int, tile: int):
     p = tile * tile
     count = count_ref[0]
     active = (active_ref[0] > 0) & (count > 0)
@@ -63,11 +65,17 @@ def _fused_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
     # elementwise + reshape, which XLA compiles fast, and match how the
     # hardware GSU streams key+record pairs through its network anyway.
     keys0 = jnp.where(in_count, depth_ref[0, :], jnp.inf)
+    # The last payload element is the lane's ORIGINAL index (f32, exact
+    # for any VMEM-sized K): it rides the compare-exchanges like every
+    # other attribute, so after the sort it is the permutation the wrapper
+    # needs to report per-lane blend contributions in input lane order —
+    # still no gathers inside the kernel.
     payload0 = (
         jnp.where(in_count, opac_ref[0, :], 0.0),
         mean_ref[0, :, 0], mean_ref[0, :, 1],
         conic_ref[0, :, 0], conic_ref[0, :, 1], conic_ref[0, :, 2],
         rgb_ref[0, :, 0], rgb_ref[0, :, 1], rgb_ref[0, :, 2],
+        lane.astype(jnp.float32),
     )
 
     def do_sort(kp):
@@ -105,7 +113,7 @@ def _fused_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
     # regardless, because used_chunks is gated on `active`).
     keys, payload = jax.lax.cond(active, do_sort, lambda kp: kp,
                                  (keys0, payload0))
-    op, mx, my, ca, cb, cc, cr, cg, cbl = payload
+    op, mx, my, ca, cb, cc, cr, cg, cbl, src = payload
     # Sorted depth comes free from the sort keys; padding -> 0 (not inf):
     # it blends with w=0 and 0 * inf would NaN the depth accumulators.
     dep = jnp.where(in_count, keys, 0.0)
@@ -126,7 +134,7 @@ def _fused_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
         return jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk)
 
     def chunk_body(state):
-        i, c_acc, t_run, done, d_acc, w_acc, td_max = state
+        i, c_acc, t_run, done, d_acc, w_acc, td_max, contrib = state
         mxs, mys = sl(mx, i), sl(my, i)
         cas, cbs, ccs = sl(ca, i), sl(cb, i), sl(cc, i)
         col = jnp.stack([sl(cr, i), sl(cg, i), sl(cbl, i)], axis=1)  # (G, 3)
@@ -157,10 +165,15 @@ def _fused_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
                                       0.0), axis=1))
         t_run = jnp.min(jnp.where(blend, tp, t_run[:, None]), axis=1)
         done = done | (tp[:, -1] < T_EPS)
-        return i + 1, c_acc, t_run, done, d_acc, w_acc, td_max
+        # Per-SORTED-lane contribution — a chunk-slice update (no
+        # scatter); the wrapper inverts the sort permutation outside the
+        # kernel to report it in input lane order.
+        contrib = jax.lax.dynamic_update_slice_in_dim(
+            contrib, jnp.sum(w, axis=0), i * chunk, axis=0)
+        return i + 1, c_acc, t_run, done, d_acc, w_acc, td_max, contrib
 
     def chunk_cond(state):
-        i, _, _, done, _, _, _ = state
+        i, _, _, done, _, _, _, _ = state
         return (i < used_chunks) & jnp.any(~done)
 
     init = (jnp.int32(0),
@@ -169,15 +182,18 @@ def _fused_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
             jnp.zeros((p,), bool),
             jnp.zeros((p,), jnp.float32),
             jnp.zeros((p,), jnp.float32),
-            jnp.zeros((p,), jnp.float32))
-    n_done, c_acc, t_run, done, d_acc, w_acc, td_max = jax.lax.while_loop(
-        chunk_cond, chunk_body, init)
+            jnp.zeros((p,), jnp.float32),
+            jnp.zeros((k,), jnp.float32))
+    (n_done, c_acc, t_run, done, d_acc, w_acc, td_max,
+     contrib) = jax.lax.while_loop(chunk_cond, chunk_body, init)
 
     rgb_out[0] = c_acc.reshape(tile, tile, 3)
     trans_out[0] = t_run.reshape(tile, tile)
     depth_out[0] = (d_acc / jnp.maximum(w_acc, 1e-8)).reshape(tile, tile)
     tdepth_out[0] = td_max.reshape(tile, tile)
     processed_out[0] = jnp.minimum(n_done * chunk, count)
+    contrib_out[0] = contrib
+    srclane_out[0] = src
 
 
 def _pow2_at_least(n: int) -> int:
@@ -199,7 +215,12 @@ def raster_plan_fused(mean2d, conic, rgb, opacity, depth, origins, counts,
     must be a power of two (so it divides the padded K).
 
     Returns rgb (R, tile, tile, 3), trans, exp_depth, trunc_depth (each
-    (R, tile, tile)), processed (R,) int32.
+    (R, tile, tile)), processed (R,) int32, lane_contrib (R, K) float32.
+    The contribution is reported in INPUT lane order even though the
+    kernel blends in sorted order: the original lane index rides the sort
+    as one more payload attribute and the inverse permutation is applied
+    by scatter out here, so the kernel itself stays gather/scatter-free.
+    Masked slots skip the sort (identity permutation) and report zeros.
     """
     r, k = opacity.shape
     if chunk & (chunk - 1):
@@ -224,6 +245,8 @@ def raster_plan_fused(mean2d, conic, rgb, opacity, depth, origins, counts,
         jax.ShapeDtypeStruct((r, tile, tile), f32),
         jax.ShapeDtypeStruct((r, tile, tile), f32),
         jax.ShapeDtypeStruct((r,), jnp.int32),
+        jax.ShapeDtypeStruct((r, k_pad), f32),
+        jax.ShapeDtypeStruct((r, k_pad), f32),
     )
     in_specs = [
         pl.BlockSpec((1, k_pad, 2), lambda i: (i, 0, 0)),
@@ -241,10 +264,20 @@ def raster_plan_fused(mean2d, conic, rgb, opacity, depth, origins, counts,
         pl.BlockSpec((1, tile, tile), lambda i: (i, 0, 0)),
         pl.BlockSpec((1, tile, tile), lambda i: (i, 0, 0)),
         pl.BlockSpec((1,), lambda i: (i,)),
+        pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
+        pl.BlockSpec((1, k_pad), lambda i: (i, 0)),
     )
-    return pl.pallas_call(
+    (rgb_o, trans_o, depth_o, tdepth_o, processed_o, contrib_sorted,
+     srclane) = pl.pallas_call(
         kernel, grid=(r,), in_specs=in_specs, out_specs=out_specs,
         out_shape=out_shapes, interpret=interpret,
     )(mean2d.astype(f32), conic.astype(f32), rgb.astype(f32),
       opacity.astype(f32), depth.astype(f32), origins.astype(f32),
       counts.astype(jnp.int32), slot_active.astype(jnp.int32))
+    # Undo the in-kernel sort: srclane is each sorted lane's original
+    # index, a true permutation of [0, k_pad) per slot (padding lanes
+    # included), so one scatter recovers input-lane order exactly.
+    src = srclane.astype(jnp.int32)
+    rows = jnp.arange(r, dtype=jnp.int32)[:, None]
+    contrib = jnp.zeros((r, k_pad), f32).at[rows, src].set(contrib_sorted)
+    return rgb_o, trans_o, depth_o, tdepth_o, processed_o, contrib[:, :k]

@@ -31,7 +31,7 @@ T_EPS = 1e-4
 def _raster_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
                    origin_ref, count_ref,
                    rgb_out, trans_out, depth_out, tdepth_out, processed_out,
-                   *, k: int, chunk: int, tile: int):
+                   contrib_out, *, k: int, chunk: int, tile: int):
     p = tile * tile
     ox = origin_ref[0, 0]
     oy = origin_ref[0, 1]
@@ -45,7 +45,7 @@ def _raster_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
     used_chunks = jnp.minimum((count + chunk - 1) // chunk, n_chunks)
 
     def chunk_body(state):
-        i, c_acc, t_run, done, d_acc, w_acc, td_max = state
+        i, c_acc, t_run, done, d_acc, w_acc, td_max, contrib = state
         sl = pl.ds(i * chunk, chunk)
         mx = mean_ref[0, sl, 0]                     # (G,)
         my = mean_ref[0, sl, 1]
@@ -83,10 +83,14 @@ def _raster_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
                             axis=1))
         t_run = jnp.min(jnp.where(blend, tp, t_run[:, None]), axis=1)
         done = done | (tp[:, -1] < T_EPS)
-        return i + 1, c_acc, t_run, done, d_acc, w_acc, td_max
+        # Per-lane contribution (sum of w over pixels) — slice update, no
+        # scatter, so the kernel stays gather/scatter-free.
+        contrib = jax.lax.dynamic_update_slice_in_dim(
+            contrib, jnp.sum(w, axis=0), i * chunk, axis=0)
+        return i + 1, c_acc, t_run, done, d_acc, w_acc, td_max, contrib
 
     def chunk_cond(state):
-        i, _, _, done, _, _, _ = state
+        i, _, _, done, _, _, _, _ = state
         return (i < used_chunks) & jnp.any(~done)
 
     init = (jnp.int32(0),
@@ -95,9 +99,10 @@ def _raster_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
             jnp.zeros((p,), bool),
             jnp.zeros((p,), jnp.float32),
             jnp.zeros((p,), jnp.float32),
-            jnp.zeros((p,), jnp.float32))
-    n_done, c_acc, t_run, done, d_acc, w_acc, td_max = jax.lax.while_loop(
-        chunk_cond, chunk_body, init)
+            jnp.zeros((p,), jnp.float32),
+            jnp.zeros((k,), jnp.float32))
+    (n_done, c_acc, t_run, done, d_acc, w_acc, td_max,
+     contrib) = jax.lax.while_loop(chunk_cond, chunk_body, init)
 
     rgb_out[0] = c_acc.reshape(tile, tile, 3)
     trans_out[0] = t_run.reshape(tile, tile)
@@ -106,6 +111,7 @@ def _raster_kernel(mean_ref, conic_ref, rgb_ref, opac_ref, depth_ref,
     # Pairs actually traversed before the chunk-granular early exit — the
     # simulator's raster work term (DPES's target quantity).
     processed_out[0] = jnp.minimum(n_done * chunk, count)
+    contrib_out[0] = contrib
 
 
 def raster_tiles_pallas(mean2d, conic, rgb, opacity, depth, origins, counts,
@@ -114,7 +120,9 @@ def raster_tiles_pallas(mean2d, conic, rgb, opacity, depth, origins, counts,
     """Rasterize all tiles. Inputs (T, K, ...) as produced by binning.
 
     Returns rgb (T, tile, tile, 3), trans, exp_depth, trunc_depth
-    (each (T, tile, tile)).
+    (each (T, tile, tile)), processed (T,) int32, lane_contrib (T, K).
+    Lanes here are pre-sorted, so the contribution comes back in input
+    lane order with no unscrambling.
     """
     t, k = opacity.shape
     if k % chunk:
@@ -127,6 +135,7 @@ def raster_tiles_pallas(mean2d, conic, rgb, opacity, depth, origins, counts,
         jax.ShapeDtypeStruct((t, tile, tile), f32),
         jax.ShapeDtypeStruct((t, tile, tile), f32),
         jax.ShapeDtypeStruct((t,), jnp.int32),
+        jax.ShapeDtypeStruct((t, k), f32),
     )
     grid = (t,)
     in_specs = [
@@ -144,6 +153,7 @@ def raster_tiles_pallas(mean2d, conic, rgb, opacity, depth, origins, counts,
         pl.BlockSpec((1, tile, tile), lambda i: (i, 0, 0)),
         pl.BlockSpec((1, tile, tile), lambda i: (i, 0, 0)),
         pl.BlockSpec((1,), lambda i: (i,)),
+        pl.BlockSpec((1, k), lambda i: (i, 0)),
     )
     return pl.pallas_call(
         kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,

@@ -7,8 +7,11 @@ Semantics match the reference 3DGS CUDA rasterizer exactly:
     whose blend would push transmittance below 1e-4 — that Gaussian is NOT
     blended (the CUDA code `continue`s before accumulating);
   - outputs: blended rgb, final transmittance, normalized opacity-weighted
-    expected depth (the paper's real-time depth estimate, Sec. IV-A) and
-    the truncated depth (depth of the last blended Gaussian, Sec. IV-B).
+    expected depth (the paper's real-time depth estimate, Sec. IV-A), the
+    truncated depth (depth of the last blended Gaussian, Sec. IV-B), the
+    processed-pair count, and the per-lane blend contribution (the sum of
+    blend weights ``alpha * T_before`` over the tile's pixels — the
+    temporal-prior statistic contribution culling thresholds on).
 """
 from __future__ import annotations
 
@@ -41,7 +44,9 @@ def raster_tile_ref(mean2d: jax.Array, conic: jax.Array, rgb: jax.Array,
     mean2d (K,2), conic (K,3), rgb (K,3), opacity (K,), depth (K,),
     origin (2,). Invalid entries must have opacity == 0.
     Returns rgb (tile,tile,3), trans (tile,tile), exp_depth (tile,tile),
-    trunc_depth (tile,tile).
+    trunc_depth (tile,tile), processed (), lane_contrib (K,) — the
+    per-lane sum of blend weights over the tile's pixels (exactly 0 for
+    padding / never-blended lanes).
     """
     px, py = _pixel_coords(origin, tile)
     p = tile * tile
@@ -71,16 +76,16 @@ def raster_tile_ref(mean2d: jax.Array, conic: jax.Array, rgb: jax.Array,
         tdepth = jnp.where(blend, jnp.maximum(tdepth, d), tdepth)
         trans = jnp.where(blend, test_t, trans)
         done = done | trigger
-        return (color, trans, done, dacc, wacc, tdepth, n_proc), None
+        return (color, trans, done, dacc, wacc, tdepth, n_proc), jnp.sum(w)
 
     init = (jnp.zeros((p, 3)), jnp.ones((p,)), jnp.zeros((p,), bool),
             jnp.zeros((p,)), jnp.zeros((p,)), jnp.zeros((p,)), jnp.int32(0))
-    (color, trans, done, dacc, wacc, tdepth, n_proc), _ = jax.lax.scan(
+    (color, trans, done, dacc, wacc, tdepth, n_proc), contrib = jax.lax.scan(
         init=init, xs=(mean2d, conic, rgb, opacity, depth), f=body)
     exp_depth = dacc / jnp.maximum(wacc, 1e-8)
     shape = (tile, tile)
     return (color.reshape(tile, tile, 3), trans.reshape(shape),
-            exp_depth.reshape(shape), tdepth.reshape(shape), n_proc)
+            exp_depth.reshape(shape), tdepth.reshape(shape), n_proc, contrib)
 
 
 def raster_tiles_ref(mean2d, conic, rgb, opacity, depth, origins, *, tile: int = TILE):

@@ -78,7 +78,8 @@ class ContinuousBatcher:
     def __init__(self, slots: int, chunk: int, cam: Camera, *,
                  group: Optional[int] = None,
                  collect_frames: bool = False,
-                 bucket: Optional[Tuple[int, int]] = None):
+                 bucket: Optional[Tuple[int, int]] = None,
+                 n_gaussians: Optional[int] = None):
         if slots < 1 or chunk < 1:
             raise ValueError(f"need slots >= 1 and chunk >= 1, got "
                              f"{slots}, {chunk}")
@@ -96,10 +97,15 @@ class ContinuousBatcher:
         # sharding, packing preference is moot).
         self.group = int(group) if group else self.slots
         self.collect_frames = bool(collect_frames)
+        # Gaussian count of the scenes this batcher serves — required
+        # when the engine config threads the contribution prior
+        # (pipeline.contrib_enabled), so fresh carries match the scan
+        # body's pytree structure. None = prior machinery off.
+        self.n_gaussians = n_gaussians
         self._slot_sid: List[Optional[int]] = [None] * self.slots
         # Idle slots are all identical (count 0, eye pose, zero state) —
         # one shared template instead of fresh device zeros every round.
-        self._idle_carry = engine.init_carry(cam, _EYE)
+        self._idle_carry = engine.init_carry(cam, _EYE, n_gaussians)
 
     @property
     def bound(self) -> int:
@@ -240,7 +246,8 @@ class ContinuousBatcher:
                     # still trace the render, so keep their inputs tame.
                     poses[i, k:] = poses[i, k - 1]
                 if sess.carry is None:
-                    sess.carry = engine.init_carry(self.cam, poses[i, 0])
+                    sess.carry = engine.init_carry(self.cam, poses[i, 0],
+                                                   self.n_gaussians)
                 carries.append(sess.carry)
                 sids.append(sid)
             else:

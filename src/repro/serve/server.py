@@ -70,7 +70,8 @@ import numpy as np
 
 from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
-from repro.core.pipeline import RenderConfig, StackedRecords
+from repro.core.pipeline import (RenderConfig, StackedRecords,
+                                 contrib_enabled)
 from repro.core.plan import rerender_demand
 from repro.core.streaming import (AcceleratorConfig, FrameWork,
                                   frameworks_from_stacked,
@@ -422,9 +423,16 @@ class StreamServer:
         bat = self._batchers.get(bucket)
         if bat is None:
             b0 = self.scfg.slot_buckets[0]
+            # With the contribution prior threaded (contrib_enabled),
+            # carries hold an (N,) leaf — N is the bucket's padded
+            # Gaussian count, so every scene in the bucket shares one
+            # carry structure.
+            n = bucket[0] if contrib_enabled(self.base_cfg) \
+                else None
             bat = ContinuousBatcher(
                 b0, self.scfg.chunk, self.cam, group=self._group_for(b0),
-                collect_frames=self.scfg.collect_frames, bucket=bucket)
+                collect_frames=self.scfg.collect_frames, bucket=bucket,
+                n_gaussians=n)
             self._batchers[bucket] = bat
         return bat
 

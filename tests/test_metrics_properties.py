@@ -1,0 +1,87 @@
+"""Property tests for core/metrics.py (PSNR / SSIM).
+
+Runs under real ``hypothesis`` when installed and under the seeded
+deterministic shim otherwise (tests/_hypothesis_compat.py) — either way
+each property is checked over a spread of generated images, not one
+hand-picked pair.
+
+Pinned contracts:
+  - identical images: PSNR hits the mse>=1e-12 clamp (finite, maximal —
+    never inf/nan), SSIM == 1 within 1e-6;
+  - SSIM is symmetric in its arguments;
+  - both metrics degrade monotonically as noise amplitude grows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core.metrics import psnr, ssim
+
+# Big enough for SSIM's 11x11 valid-mode window, small enough to be fast.
+_H = _W = 24
+
+
+def _image(seed: int) -> jnp.ndarray:
+    return jax.random.uniform(jax.random.PRNGKey(seed), (_H, _W, 3))
+
+
+def _noise(seed: int) -> jnp.ndarray:
+    return jax.random.normal(jax.random.PRNGKey(seed + 7919), (_H, _W, 3))
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=5, deadline=None)
+def test_psnr_identical_is_max_clamped(seed):
+    """psnr(x, x) has mse 0, clamped to 1e-12: exactly 120 dB at
+    max_val=1 — finite (never inf/nan), and no other pair beats it."""
+    img = _image(seed)
+    p = float(psnr(img, img))
+    assert np.isfinite(p)
+    np.testing.assert_allclose(p, 120.0, atol=1e-4)
+    assert float(psnr(img, img + 0.1)) < p
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.floats(min_value=0.5, max_value=4.0))
+@settings(max_examples=5, deadline=None)
+def test_psnr_max_val_scale(seed, max_val):
+    """The clamp ceiling moves with max_val: +20*log10(max_val) dB."""
+    img = _image(seed)
+    p = float(psnr(img, img, max_val=max_val))
+    np.testing.assert_allclose(p, 120.0 + 20.0 * np.log10(max_val),
+                               rtol=1e-5)
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=5, deadline=None)
+def test_ssim_identical_is_one(seed):
+    img = _image(seed)
+    np.testing.assert_allclose(float(ssim(img, img)), 1.0, atol=1e-6)
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=5, deadline=None)
+def test_ssim_symmetry(seed_a, seed_b):
+    a, b = _image(seed_a), _image(seed_b)
+    np.testing.assert_allclose(float(ssim(a, b)), float(ssim(b, a)),
+                               atol=1e-6)
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=5, deadline=None)
+def test_monotone_degradation_under_noise(seed):
+    """One noise pattern at growing amplitude: PSNR strictly falls (mse
+    grows as a^2) and SSIM falls with it — more corruption never scores
+    better."""
+    img = _image(seed)
+    noise = _noise(seed)
+    amps = (0.01, 0.05, 0.2, 0.5)
+    psnrs = [float(psnr(img + a * noise, img)) for a in amps]
+    ssims = [float(ssim(img + a * noise, img)) for a in amps]
+    for lo, hi in zip(psnrs[1:], psnrs[:-1]):
+        assert lo < hi
+    for lo, hi in zip(ssims[1:], ssims[:-1]):
+        assert lo < hi + 1e-6
+    assert ssims[-1] < 1.0

@@ -198,3 +198,33 @@ def test_scatter_slots_masks_inactive(small_cam):
     out = np.asarray(plan_mod.scatter_slots(sp, vals, t, fill=-3))
     assert (out[np.asarray(rerender)] == 9).all()
     assert (out[~np.asarray(rerender)] == -3).all()
+
+
+def test_rerender_demand_dtype_contract():
+    """rerender_demand is always int32, whatever mixture of jnp/numpy
+    int/float/bool dtypes the stacked records arrive in, and it counts
+    overflow_tiles on top of the active set (the serve layer compares it
+    to bucket sizes on host with np.asarray)."""
+    active = np.zeros((3, 8), bool)
+    active[0, :5] = True
+    active[2, :8] = True
+    overflow = np.asarray([0, 0, 7])
+    d = plan_mod.rerender_demand(active, overflow)
+    assert d.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(d), [5, 0, 15])
+    # Host-side float records (e.g. loaded from a JSON artifact) must
+    # not silently promote the result to float.
+    d_f = plan_mod.rerender_demand(active.astype(np.float64),
+                                   overflow.astype(np.float32))
+    assert d_f.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(d_f), [5, 0, 15])
+    # int64 overflow counters (default numpy int on host) stay int32.
+    d_i = plan_mod.rerender_demand(active, overflow.astype(np.int64))
+    assert d_i.dtype == jnp.int32
+    # Stacked (B, F, T) records reduce over the last axis only.
+    stacked = np.broadcast_to(active, (2, 3, 8))
+    d_b = plan_mod.rerender_demand(stacked, np.broadcast_to(overflow,
+                                                            (2, 3)))
+    assert d_b.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(d_b),
+                                  [[5, 0, 15], [5, 0, 15]])

@@ -37,16 +37,20 @@ def _tile_inputs(scene, cam, capacity):
 
 def _shuffle_lanes(args, seed=0):
     """Permute each slot's first `count` lanes (attrs move together) —
-    the kernel's input contract: packed, any depth order."""
+    the kernel's input contract: packed, any depth order. Returns the
+    shuffled args plus the per-slot permutations (lane_contrib follows
+    INPUT lane order, so it permutes with the lanes)."""
     mean2d, conic, rgb, opacity, depth, origins, counts = args
     rng = np.random.default_rng(seed)
     outs = [np.asarray(a).copy() for a in (mean2d, conic, rgb, opacity,
                                            depth)]
+    perms = []
     for r, c in enumerate(np.asarray(counts)):
         p = rng.permutation(int(c))
+        perms.append(p)
         for o in outs:
             o[r, :int(c)] = o[r, :int(c)][p]
-    return tuple(jnp.asarray(o) for o in outs) + (origins, counts)
+    return tuple(jnp.asarray(o) for o in outs) + (origins, counts), perms
 
 
 @pytest.mark.parametrize("capacity,chunk", [
@@ -76,13 +80,23 @@ def test_fused_matches_jnp_and_ref(small_scene, small_cam, capacity, chunk):
 
 def test_fused_sorts_in_kernel(small_scene, small_cam):
     """Depth-shuffled lanes must render identically: the GSU sort is
-    part of the kernel, not a caller obligation."""
+    part of the kernel, not a caller obligation. lane_contrib is the one
+    output that rightly differs — it reports per-INPUT-lane mass, so it
+    follows the applied permutation exactly."""
     args = _tile_inputs(small_scene, small_cam, 64)
+    shuf_args, perms = _shuffle_lanes(args)
     o_sorted = ops.raster_tiles(*args, impl="pallas_fused", chunk=32)
-    o_shuf = ops.raster_tiles(*_shuffle_lanes(args), impl="pallas_fused",
-                              chunk=32)
-    for a, b in zip(o_shuf, o_sorted):
+    o_shuf = ops.raster_tiles(*shuf_args, impl="pallas_fused", chunk=32)
+    for a, b in zip(o_shuf[:5], o_sorted[:5]):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    contrib = np.asarray(o_sorted[5])
+    contrib_shuf = np.asarray(o_shuf[5])
+    counts = np.asarray(args[6])
+    for r, p in enumerate(perms):
+        c = int(counts[r])
+        np.testing.assert_array_equal(contrib_shuf[r, :c],
+                                      contrib[r, :c][p])
+        np.testing.assert_array_equal(contrib_shuf[r, c:], 0.0)
 
 
 def test_masked_slots_render_empty(small_scene, small_cam):

@@ -1,0 +1,129 @@
+"""Edge-case tests for the serving bucket policy (serve/cache.py).
+
+``suggest_capacity`` / ``BucketPolicy.suggest_buckets`` consume recorded
+demand that real servers routinely degenerate: no frames yet, only key
+frames, all-zero demand, demand past the largest bucket, and the
+quantile knob at its 0.0 / 1.0 boundaries. Each of those must map to a
+defined bucket, never an exception or an off-list value.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serve.cache import (BucketPolicy, pick_capacity, snap_capacity,
+                               suggest_buckets, suggest_capacity)
+
+BUCKETS = (8, 16, 32)
+
+
+def _records(active, overflow, is_full):
+    """Minimal stand-in for StackedRecords: the three fields
+    suggest_capacity reads, as (F, ...) numpy arrays."""
+    return SimpleNamespace(active=np.asarray(active),
+                           overflow_tiles=np.asarray(overflow),
+                           is_full=np.asarray(is_full))
+
+
+def _demand_records(demands, tiles=64):
+    """Sparse-frame records with the given per-frame demands (as active
+    tile counts, no overflow)."""
+    f = len(demands)
+    active = np.zeros((f, tiles), bool)
+    for i, d in enumerate(demands):
+        active[i, :d] = True
+    return _records(active, np.zeros((f,), np.int32), np.zeros((f,), bool))
+
+
+# --- empty / degenerate demand -------------------------------------------
+
+def test_empty_records_pick_smallest_bucket():
+    rec = _records(np.zeros((0, 64), bool), np.zeros((0,), np.int32),
+                   np.zeros((0,), bool))
+    assert suggest_capacity(rec, buckets=BUCKETS) == BUCKETS[0]
+
+
+def test_only_full_frames_pick_smallest_bucket():
+    """Key frames re-render everything by definition — they carry no
+    demand signal, so an all-full history is the same as no history."""
+    rec = _records(np.ones((4, 64), bool), np.zeros((4,), np.int32),
+                   np.ones((4,), bool))
+    assert suggest_capacity(rec, buckets=BUCKETS) == BUCKETS[0]
+
+
+def test_frame_mask_can_empty_the_sample():
+    rec = _demand_records([40, 50, 60])
+    assert suggest_capacity(rec, buckets=BUCKETS,
+                            frame_mask=np.zeros((3,), bool)) == BUCKETS[0]
+    assert suggest_capacity(rec, buckets=BUCKETS,
+                            frame_mask=np.ones((3,), bool)) == BUCKETS[-1]
+
+
+def test_all_zero_demand_picks_smallest_bucket():
+    rec = _demand_records([0, 0, 0])
+    assert suggest_capacity(rec, buckets=BUCKETS) == BUCKETS[0]
+
+
+def test_demand_above_largest_bucket_saturates():
+    """Runaway demand snaps to the LARGEST bucket (overflow tiles then
+    degrade to interpolation) — it must not raise or extrapolate."""
+    rec = _demand_records([64, 64])
+    assert suggest_capacity(rec, buckets=BUCKETS) == BUCKETS[-1]
+    assert snap_capacity(10 ** 9, BUCKETS) == BUCKETS[-1]
+
+
+def test_overflow_tiles_count_as_demand():
+    """Demand = active + overflow (plan.rerender_demand): 6 active + 20
+    dropped tiles must shop for a 26-slot bucket, not a 8-slot one."""
+    rec = _records(
+        np.concatenate([np.ones((1, 6), bool), np.zeros((1, 58), bool)],
+                       axis=1),
+        np.asarray([20], np.int32), np.zeros((1,), bool))
+    assert suggest_capacity(rec, buckets=BUCKETS) == 32
+
+
+# --- quantile boundaries --------------------------------------------------
+
+def test_quantile_boundaries():
+    rec = _demand_records([2, 12, 31])
+    assert suggest_capacity(rec, quantile=0.0, buckets=BUCKETS) == 8
+    assert suggest_capacity(rec, quantile=1.0, buckets=BUCKETS) == 32
+    # Exactly-on-bucket demand stays in that bucket (<=, not <).
+    assert pick_capacity([16], 1.0, BUCKETS) == 16
+    assert pick_capacity([17], 1.0, BUCKETS) == 32
+
+
+def test_policy_rejects_out_of_range_quantile():
+    with pytest.raises(ValueError):
+        BucketPolicy(quantile=-0.1)
+    with pytest.raises(ValueError):
+        BucketPolicy(quantile=1.5)
+    with pytest.raises(ValueError):
+        BucketPolicy(r_buckets=(16, 8))         # must ascend
+    with pytest.raises(ValueError):
+        BucketPolicy(b_buckets=())              # must be non-empty
+
+
+# --- the 2-axis suggestion ------------------------------------------------
+
+def test_suggest_buckets_empty_queue_and_records():
+    rec = _records(np.zeros((0, 64), bool), np.zeros((0,), np.int32),
+                   np.zeros((0,), bool))
+    pol = BucketPolicy(b_buckets=(2, 4, 8), r_buckets=BUCKETS)
+    assert suggest_buckets(rec, 0, pol) == (2, BUCKETS[0])
+    assert suggest_buckets(rec, 10 ** 6, pol) == (8, BUCKETS[0])
+
+
+@given(st.integers(min_value=0, max_value=200),
+       st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=5, deadline=None)
+def test_snap_and_pick_always_land_on_a_bucket(demand, quantile):
+    """Whatever the demand and quantile, the answer is a listed bucket
+    that covers the demand when any bucket can."""
+    snapped = snap_capacity(demand, BUCKETS)
+    assert snapped in BUCKETS
+    if demand <= BUCKETS[-1]:
+        assert snapped >= demand
+    picked = pick_capacity([demand], quantile, BUCKETS)
+    assert picked == snapped

@@ -72,6 +72,26 @@ def test_pad_scene_renders_bit_identical(small_scene, small_cam):
         pad_scene(small_scene, small_scene.num_gaussians - 1)
 
 
+def test_pad_scene_contrib_parity(small_scene, small_cam):
+    """The contribution statistics obey the same padding contract: the
+    padded scene's per-lane contributions are bit-identical, its
+    per-Gaussian prior matches on the real prefix, and every padding
+    Gaussian reads as never-considered (inf = keep-all)."""
+    n = small_scene.num_gaussians
+    padded = pad_scene(small_scene, 1024)
+    cfg = RenderConfig(capacity=128, record_contrib=True)
+    fn = jax.jit(render_full_frame, static_argnames="cfg")
+    _, st_p, rec_p = fn(padded, small_cam, cfg=cfg)
+    _, st_o, rec_o = fn(small_scene, small_cam, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(rec_p.lane_contrib),
+                                  np.asarray(rec_o.lane_contrib))
+    prior_p = np.asarray(st_p.contrib)
+    prior_o = np.asarray(st_o.contrib)
+    assert prior_p.shape == (1024,)
+    np.testing.assert_array_equal(prior_p[:n], prior_o)
+    assert np.all(np.isinf(prior_p[n:]))
+
+
 # --- registry lifecycle ---------------------------------------------------
 
 def test_registry_register_evict_refs():
