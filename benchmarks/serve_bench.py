@@ -43,6 +43,7 @@ import jax
 
 from benchmarks.common import camera, scenes
 from repro.core.pipeline import RenderConfig
+from repro.obs.trace import validate_chrome_trace
 from repro.scenes.synthetic import random_blob_scene, structured_scene
 from repro.serve import (AdmissionConfig, PoissonTraffic, ReplayTraffic,
                          SceneRegistry, ServeConfig, StreamServer,
@@ -123,14 +124,22 @@ def _make_scenes(k: int, n: int, first: str) -> List:
     return out
 
 
-def _serve(setup: dict, n_scenes: int) -> dict:
+def trace_path(name: str) -> str:
+    """A bare file name lands next to the JSON artifacts; any path with
+    a directory component is used as given."""
+    if os.path.dirname(name):
+        return name
+    return os.path.join(_ARTIFACTS, name)
+
+
+def _serve(setup: dict, n_scenes: int, scfg: ServeConfig):
     cam = camera(setup["image"], setup["image"])
-    registry = SceneRegistry(setup["scfg"].scene_buckets)
+    registry = SceneRegistry(scfg.scene_buckets)
     for scene in _make_scenes(n_scenes, setup["n_gaussians"],
                               setup.get("scene", "outdoor")):
         registry.register(scene)
     cfg = RenderConfig(window=setup["window"], capacity=256)
-    server = StreamServer(registry, cam, cfg, setup["scfg"])
+    server = StreamServer(registry, cam, cfg, scfg)
     if setup.get("warmup"):
         # Compile all (scene_bucket, B, R) executables up front so
         # reported latencies measure serving, not jit cold-start (the
@@ -138,14 +147,43 @@ def _serve(setup: dict, n_scenes: int) -> dict:
         # stay short).
         server.warmup()
     traffic = dataclasses.replace(setup["traffic"], scenes=n_scenes)
-    return server.run(PoissonTraffic(traffic), max_rounds=200)
+    return server.run(PoissonTraffic(traffic), max_rounds=200), server
 
 
-def run(smoke: bool = False, n_scenes: Optional[int] = None) -> List[dict]:
+def _write_trace(server: StreamServer, path: str) -> int:
+    """Export + validate the run's Chrome trace; assert the observability
+    contract CI relies on (DESIGN.md §13): well-formed JSON with round
+    spans, and a compile-vs-dispatch split for at least one cache key."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    n_events = server.tracer.write(path)
+    summary = validate_chrome_trace(server.tracer.to_chrome())
+    for name in ("round", "plan", "dispatch", "barrier", "commit",
+                 "compile"):
+        assert name in summary["names"], \
+            f"trace is missing {name!r} spans: {summary['names']}"
+    compiled = [k for k, t in server.cache.stats()["per_key_timing"].items()
+                if t["compile_ms"] is not None]
+    assert compiled, "no cache key recorded a compile time"
+    compile_spans = [ev for ev in server.tracer.events()
+                     if ev["name"] == "compile"]
+    assert compile_spans and all(
+        "key" in ev.get("args", {}) for ev in compile_spans), \
+        "compile spans must carry their cache key"
+    print(f"# trace: {os.path.normpath(path)} ({n_events} events, "
+          f"{summary['tracks']} tracks, {len(compiled)} compiles)")
+    return n_events
+
+
+def run(smoke: bool = False, n_scenes: Optional[int] = None,
+        trace: Optional[str] = None) -> List[dict]:
     setup = SMOKE if smoke else FULL
     n_scenes = setup["scenes"] if n_scenes is None else int(n_scenes)
     scfg = setup["scfg"]
-    report = _serve(setup, n_scenes)
+    if trace is not None:
+        scfg = dataclasses.replace(scfg, trace=True)
+    report, server = _serve(setup, n_scenes, scfg)
+    if trace is not None:
+        _write_trace(server, trace_path(trace))
     out = SMOKE_ARTIFACT if smoke else ARTIFACT
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
@@ -315,12 +353,19 @@ def main() -> None:
     ap.add_argument("--replay", choices=("skewed", "burst"), default=None,
                     help="run the starvation before/after comparison on "
                          "this arrival pattern instead of Poisson traffic")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record serve-round spans and write a Chrome-"
+                         "trace JSON (loads in ui.perfetto.dev); a bare "
+                         "file name lands in experiments/artifacts/")
     args = ap.parse_args()
     if args.replay:
+        if args.trace:
+            ap.error("--trace applies to the Poisson run, not --replay")
         rows = run_replay(smoke=args.smoke, pattern=args.replay)
         out = REPLAY_SMOKE_ARTIFACT if args.smoke else REPLAY_ARTIFACT
     else:
-        rows = run(smoke=args.smoke, n_scenes=args.scenes)
+        rows = run(smoke=args.smoke, n_scenes=args.scenes,
+                   trace=args.trace)
         out = SMOKE_ARTIFACT if args.smoke else ARTIFACT
     for row in rows:
         print(",".join(f"{k}={v}" for k, v in row.items()))

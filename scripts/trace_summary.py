@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Summarize a serve-loop Chrome trace (benchmarks/serve_bench.py --trace).
+
+Reads the Chrome-trace JSON a ``StreamServer`` tracer exported and
+prints where the wall-clock actually went: total time per span name
+(plan / resize / admit / build / dispatch / barrier / commit / compile /
+warmup), total time per track (the round track plus one track per
+scene-bucket group), and a per-round table (round span duration, frames
+dispatched, barrier share). ``--check`` additionally enforces the
+observability contract CI relies on — the trace validates
+(``repro.obs.trace.validate_chrome_trace``) and records at least one
+``compile`` span carrying its executable-cache key.
+
+Usage:
+    python scripts/trace_summary.py experiments/artifacts/out.trace.json
+    python scripts/trace_summary.py --check out.trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.obs.trace import validate_chrome_trace  # noqa: E402
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def split_events(trace: dict):
+    """(track-name map, X events, instant events) from one trace dict."""
+    tracks = {}
+    for ev in trace["traceEvents"]:
+        if ev.get("ph") == "M" and ev["name"] == "thread_name":
+            tracks[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    spans = [ev for ev in trace["traceEvents"] if ev.get("ph") == "X"]
+    instants = [ev for ev in trace["traceEvents"] if ev.get("ph") == "i"]
+    return tracks, spans, instants
+
+
+def by_name(spans) -> dict:
+    """span name -> (count, total ms). 'round' contains the others, so
+    the per-name totals deliberately do not sum to the run length."""
+    agg = defaultdict(lambda: [0, 0.0])
+    for ev in spans:
+        agg[ev["name"]][0] += 1
+        agg[ev["name"]][1] += ev["dur"] / 1e3
+    return {k: (n, ms) for k, (n, ms) in agg.items()}
+
+
+def by_track(spans, tracks) -> dict:
+    """track name -> total ms of its TOP-LEVEL spans (nested spans are
+    contained in their parents; counting both would double-bill)."""
+    per = defaultdict(list)
+    for ev in spans:
+        per[tracks.get((ev["pid"], ev["tid"]),
+                       str(ev["tid"]))].append(
+            (ev["ts"], ev["ts"] + ev["dur"]))
+    out = {}
+    for track, ivals in per.items():
+        ivals.sort()
+        total, open_end = 0.0, -1.0
+        for t0, t1 in ivals:
+            if t0 >= open_end:          # new top-level span
+                total += t1 - t0
+                open_end = t1
+            # else: nested inside the open span — already billed
+        out[track] = total / 1e3
+    return out
+
+
+def round_table(spans, tracks):
+    """Per-round rows from the round track: duration, frames dispatched
+    (summed over that round's dispatch spans), barrier ms."""
+    rounds = sorted(
+        (ev for ev in spans
+         if ev["name"] == "round" and "round" in ev.get("args", {})),
+        key=lambda ev: ev["ts"])
+    rows = []
+    for ev in rounds:
+        t0, t1 = ev["ts"], ev["ts"] + ev["dur"]
+        inside = [e for e in spans if t0 <= e["ts"] < t1]
+        frames = sum(e.get("args", {}).get("frames", 0)
+                     for e in inside if e["name"] == "dispatch")
+        barrier = sum(e["dur"] for e in inside if e["name"] == "barrier")
+        compile_ms = sum(e["dur"] for e in inside
+                         if e["name"] == "compile") / 1e3
+        rows.append({"round": ev["args"]["round"],
+                     "ms": ev["dur"] / 1e3, "frames": frames,
+                     "barrier_ms": barrier / 1e3,
+                     "compile_ms": compile_ms})
+    return rows
+
+
+def summarize(path: str, check: bool = False) -> int:
+    trace = load(path)
+    summary = validate_chrome_trace(trace)
+    tracks, spans, instants = split_events(trace)
+    other = trace.get("otherData", {})
+
+    print(f"{path}: {summary['events']} events "
+          f"({summary['spans']} spans, {len(instants)} instants) on "
+          f"{summary['tracks']} tracks; dropped={other.get('dropped', 0)}")
+
+    print("\nper span name (ms; 'round' contains the rest):")
+    for name, (n, ms) in sorted(by_name(spans).items(),
+                                key=lambda kv: -kv[1][1]):
+        print(f"  {name:<10} n={n:<5} total={ms:9.2f}")
+
+    print("\nper track (top-level ms):")
+    for track, ms in sorted(by_track(spans, tracks).items(),
+                            key=lambda kv: -kv[1]):
+        print(f"  {track:<24} {ms:9.2f}")
+
+    rows = round_table(spans, tracks)
+    if rows:
+        print("\nper round:")
+        print(f"  {'round':>5} {'ms':>9} {'frames':>6} {'barrier_ms':>10} "
+              f"{'compile_ms':>10}")
+        for r in rows:
+            print(f"  {r['round']:>5} {r['ms']:>9.2f} {r['frames']:>6} "
+                  f"{r['barrier_ms']:>10.2f} {r['compile_ms']:>10.2f}")
+
+    if check:
+        compiles = [ev for ev in spans if ev["name"] == "compile"]
+        if not compiles:
+            print("CHECK FAILED: no compile spans recorded", file=sys.stderr)
+            return 1
+        if not all("key" in ev.get("args", {}) for ev in compiles):
+            print("CHECK FAILED: compile span missing its cache key",
+                  file=sys.stderr)
+            return 1
+        if not rows:
+            print("CHECK FAILED: no round spans recorded", file=sys.stderr)
+            return 1
+        print(f"\ncheck ok: {len(compiles)} compile span(s) with keys, "
+              f"{len(rows)} round span(s)")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome-trace JSON from --trace")
+    ap.add_argument("--check", action="store_true",
+                    help="validate + assert compile/round spans (CI)")
+    args = ap.parse_args()
+    sys.exit(summarize(args.trace, check=args.check))
+
+
+if __name__ == "__main__":
+    main()

@@ -78,6 +78,7 @@ from repro.core.pipeline import (FrameRecord, FrameState, RenderConfig,
                                  StackedRecords, TrajectoryResult,
                                  contrib_enabled, render_full_frame,
                                  render_sparse_frame)
+from repro.obs.trace import annotate
 
 
 class EngineCarry(NamedTuple):
@@ -178,12 +179,15 @@ def make_frame_step(scene, cam: Camera, cfg: RenderConfig,
         ref_cam = cam.with_pose(carry.prev_pose)
 
         def full_branch(state: FrameState):
-            out, new_state, rec = render_full_frame(
-                scene, tgt_cam, cfg, frame_idx=carry.step)
+            with annotate("repro.frame/full"):
+                out, new_state, rec = render_full_frame(
+                    scene, tgt_cam, cfg, frame_idx=carry.step)
             return out.rgb, new_state, rec
 
         def sparse_branch(state: FrameState):
-            return render_sparse_frame(scene, ref_cam, tgt_cam, state, cfg)
+            with annotate("repro.frame/sparse"):
+                return render_sparse_frame(scene, ref_cam, tgt_cam, state,
+                                           cfg)
 
         if cfg.window == 1:
             # Statically always-full: skip compiling the warp branch.

@@ -37,6 +37,7 @@ from repro.core.plan import TilePlan
 from repro.core.projection import preprocess
 from repro.core.raster import RenderOutput, render_plan_slots, untile
 from repro.kernels.ops import default_impl
+from repro.obs.trace import annotate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,44 +166,50 @@ def render_planned_frame(scene, cam: Camera, plan: TilePlan,
     the LDU schedule + per-slot workloads, and ``stats`` the remaining
     per-slot counters the wrappers fold into a ``FrameRecord``.
     """
-    proj = preprocess(scene, cam, near=cfg.near)
-    grid = intersect.make_tile_grid(cam)
-    slots = intersect.take_tiles(grid, plan.tile_ids)
+    with annotate("repro.frame/preprocess"):
+        proj = preprocess(scene, cam, near=cfg.near)
+        grid = intersect.make_tile_grid(cam)
+        slots = intersect.take_tiles(grid, plan.tile_ids)
 
-    if cfg.intersect_method == "tait":
-        stage1 = intersect.tait_stage1_mask(proj, slots)
-        mask = intersect.tait_mask(proj, slots)
-        cand_src = stage1
-    else:
-        mask = intersect.intersect(proj, slots, cfg.intersect_method)
-        cand_src = mask
-    candidate_pairs = jnp.sum(
-        (cand_src & plan.slot_active[None, :]).astype(jnp.int32))
-    mask = mask & plan.slot_active[None, :]
-    if cfg.cull_threshold > 0.0 and cull_prior is not None:
-        gate = cull_gate if cull_gate is not None \
-            else jnp.ones((cam.num_tiles,), bool)
-        mask, slot_active, culled_pairs = culling.cull_pairs(
-            mask, plan.slot_active, plan.tile_ids, cull_prior, gate,
-            cfg.cull_threshold)
-        plan = plan._replace(slot_active=slot_active)
-    else:
-        culled_pairs = jnp.int32(0)
-    raw_slots = jnp.sum(mask.astype(jnp.int32), axis=0)
+    with annotate("repro.frame/intersect"):
+        if cfg.intersect_method == "tait":
+            stage1 = intersect.tait_stage1_mask(proj, slots)
+            mask = intersect.tait_mask(proj, slots)
+            cand_src = stage1
+        else:
+            mask = intersect.intersect(proj, slots, cfg.intersect_method)
+            cand_src = mask
+        candidate_pairs = jnp.sum(
+            (cand_src & plan.slot_active[None, :]).astype(jnp.int32))
+        mask = mask & plan.slot_active[None, :]
+    with annotate("repro.frame/cull"):
+        if cfg.cull_threshold > 0.0 and cull_prior is not None:
+            gate = cull_gate if cull_gate is not None \
+                else jnp.ones((cam.num_tiles,), bool)
+            mask, slot_active, culled_pairs = culling.cull_pairs(
+                mask, plan.slot_active, plan.tile_ids, cull_prior, gate,
+                cfg.cull_threshold)
+            plan = plan._replace(slot_active=slot_active)
+        else:
+            culled_pairs = jnp.int32(0)
+        raw_slots = jnp.sum(mask.astype(jnp.int32), axis=0)
 
-    limit = None
-    if dpes_depth is not None:
-        limit = dpes_depth[plan.tile_ids] * cfg.dpes_margin
-    bins = binning.build_tile_bins(mask, proj.depth, cfg.capacity,
-                                   depth_limit=limit)
+    with annotate("repro.frame/bin"):
+        limit = None
+        if dpes_depth is not None:
+            limit = dpes_depth[plan.tile_ids] * cfg.dpes_margin
+        bins = binning.build_tile_bins(mask, proj.depth, cfg.capacity,
+                                       depth_limit=limit)
     # Device LDU (paper Sec. V-B): post-DPES counts are the workload
     # prediction; the greedy Morton fill + light-to-heavy order runs in
     # jnp, inside whatever jit/scan wraps this frame.
-    plan = plan_mod.schedule_plan(plan, bins.count, cfg.ldu_blocks)
+    with annotate("repro.frame/ldu_schedule"):
+        plan = plan_mod.schedule_plan(plan, bins.count, cfg.ldu_blocks)
 
-    out = render_plan_slots(proj, bins, slots.origins, plan.tile_ids, grid,
-                            impl=cfg.impl, chunk=cfg.chunk,
-                            slot_active=plan.slot_active)
+    with annotate("repro.frame/raster"):
+        out = render_plan_slots(proj, bins, slots.origins, plan.tile_ids,
+                                grid, impl=cfg.impl, chunk=cfg.chunk,
+                                slot_active=plan.slot_active)
     gauss_prior = None
     if contrib_enabled(cfg):
         # A Gaussian was "considered" if it occupies a valid bin lane
@@ -281,11 +288,14 @@ def render_sparse_frame(scene, ref_cam: Camera, tgt_cam: Camera,
     ``R = rerender_capacity`` slots (or R = T when uncapped); re-render
     tiles beyond R degrade to interpolation and are counted.
     """
-    w = warp_mod.viewpoint_transform(
-        state.rgb, state.exp_depth, state.trunc_depth, state.source_mask,
-        ref_cam, tgt_cam, n0_ratio=cfg.n0_ratio, near=cfg.near)
-    tplan = plan_mod.sparse_plan(w.rerender_tile, tgt_cam.tiles_x,
-                                 tgt_cam.tiles_y, cfg.rerender_capacity)
+    with annotate("repro.frame/warp"):
+        w = warp_mod.viewpoint_transform(
+            state.rgb, state.exp_depth, state.trunc_depth,
+            state.source_mask, ref_cam, tgt_cam, n0_ratio=cfg.n0_ratio,
+            near=cfg.near)
+        tplan = plan_mod.sparse_plan(w.rerender_tile, tgt_cam.tiles_x,
+                                     tgt_cam.tiles_y,
+                                     cfg.rerender_capacity)
 
     limit = jnp.where(jnp.isfinite(w.dpes_depth), w.dpes_depth, jnp.inf) \
         if cfg.use_dpes else None
@@ -302,17 +312,21 @@ def render_sparse_frame(scene, ref_cam: Camera, tgt_cam: Camera,
     # --- compose the final frame -----------------------------------------
     # Interpolated tiles: warped pixels + diffusion-inpainted holes; the
     # depth maps ride the same inpainting so chaining stays consistent.
-    stacked = jnp.concatenate(
-        [w.rgb, w.exp_depth[..., None], w.trunc_depth[..., None]], axis=-1)
-    inpainted = warp_mod.inpaint(stacked, w.filled, iters=cfg.inpaint_iters)
-    rgb_warp = inpainted[..., :3]
-    depth_warp = inpainted[..., 3]
-    trunc_warp = inpainted[..., 4]
+    with annotate("repro.frame/compose"):
+        stacked = jnp.concatenate(
+            [w.rgb, w.exp_depth[..., None], w.trunc_depth[..., None]],
+            axis=-1)
+        inpainted = warp_mod.inpaint(stacked, w.filled,
+                                     iters=cfg.inpaint_iters)
+        rgb_warp = inpainted[..., :3]
+        depth_warp = inpainted[..., 3]
+        trunc_warp = inpainted[..., 4]
 
-    rr_px = _tile_flag_to_pixels(rerender, tgt_cam.tiles_x, tgt_cam.tiles_y)
-    rgb_final = jnp.where(rr_px[..., None], out.rgb, rgb_warp)
-    exp_depth = jnp.where(rr_px, out.exp_depth, depth_warp)
-    trunc_depth = jnp.where(rr_px, out.trunc_depth, trunc_warp)
+        rr_px = _tile_flag_to_pixels(rerender, tgt_cam.tiles_x,
+                                     tgt_cam.tiles_y)
+        rgb_final = jnp.where(rr_px[..., None], out.rgb, rgb_warp)
+        exp_depth = jnp.where(rr_px, out.exp_depth, depth_warp)
+        trunc_depth = jnp.where(rr_px, out.trunc_depth, trunc_warp)
 
     # --- next-frame source mask (the "TW w/ mask" mechanism) -------------
     coverage_ok = (1.0 - out.transmittance) > cfg.min_coverage

@@ -24,6 +24,7 @@ from repro.kernels.raster_tile import (ALPHA_MAX, ALPHA_MIN, T_EPS,
                                        raster_tiles_pallas)
 from repro.kernels.raster_plan import raster_plan_fused
 from repro.kernels.preprocess import preprocess_geom_pallas
+from repro.obs.trace import annotate
 
 
 def _on_tpu() -> bool:
@@ -128,22 +129,25 @@ def raster_tiles(mean2d, conic, rgb, opacity, depth, origins, counts,
     before binning — so every impl renders it as empty and the mask is a
     cost hint, not a semantic input (DESIGN.md §9).
     """
-    if impl == "pallas_fused":
-        return raster_plan_fused(mean2d, conic, rgb, opacity, depth,
-                                 origins, counts, slot_active,
-                                 chunk=chunk, tile=tile,
-                                 interpret=not _on_tpu())
-    if impl == "pallas":
-        return raster_tiles_pallas(mean2d, conic, rgb, opacity, depth,
-                                   origins, counts, chunk=chunk, tile=tile,
-                                   interpret=not _on_tpu())
-    if impl == "jnp_chunked":
-        fn = functools.partial(_raster_tile_chunked_jnp, chunk=chunk, tile=tile)
-        return jax.vmap(fn)(mean2d, conic, rgb, opacity, depth, origins,
-                            counts)
-    if impl == "ref":
-        return ref_kernels.raster_tiles_ref(mean2d, conic, rgb, opacity,
-                                            depth, origins, tile=tile)
+    with annotate(f"repro.raster/{impl}"):
+        if impl == "pallas_fused":
+            return raster_plan_fused(mean2d, conic, rgb, opacity, depth,
+                                     origins, counts, slot_active,
+                                     chunk=chunk, tile=tile,
+                                     interpret=not _on_tpu())
+        if impl == "pallas":
+            return raster_tiles_pallas(mean2d, conic, rgb, opacity, depth,
+                                       origins, counts, chunk=chunk,
+                                       tile=tile, interpret=not _on_tpu())
+        if impl == "jnp_chunked":
+            fn = functools.partial(_raster_tile_chunked_jnp, chunk=chunk,
+                                   tile=tile)
+            return jax.vmap(fn)(mean2d, conic, rgb, opacity, depth,
+                                origins, counts)
+        if impl == "ref":
+            return ref_kernels.raster_tiles_ref(mean2d, conic, rgb,
+                                                opacity, depth, origins,
+                                                tile=tile)
     raise ValueError(f"unknown impl {impl!r}")
 
 

@@ -1,0 +1,20 @@
+"""Observability layer (DESIGN.md §13): tracing + unified metrics.
+
+``trace`` — span-based host tracing with Chrome-trace/Perfetto JSON
+export, plus :func:`annotate` for naming jitted stages so XLA-level
+profiles line up with the host spans. ``metrics`` — the
+counter/gauge/histogram registry whose ``snapshot()`` the serve report
+composes (and whose ``to_prometheus()`` a scraper can poll).
+
+Both are deliberately dependency-free (jax + numpy only) so every layer
+of the stack — kernels, core, serve, benchmarks — can use them without
+import cycles.
+"""
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import (NULL_TRACER, Tracer, annotate,
+                             validate_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NULL_TRACER",
+    "Tracer", "annotate", "validate_chrome_trace",
+]

@@ -42,6 +42,8 @@ import dataclasses
 import math
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
+from repro.obs.metrics import MetricsRegistry
+
 __all__ = [
     "AdmissionConfig", "AdmissionController", "AdmissionRejected",
     "BucketDemand", "SLOClass", "DEFAULT_SLO_CLASSES", "jain_index",
@@ -161,10 +163,22 @@ class BucketDemand:
 
 
 class AdmissionController:
-    """Round planning + backpressure + fairness accounting."""
+    """Round planning + backpressure + fairness accounting.
 
-    def __init__(self, cfg: AdmissionConfig = AdmissionConfig()):
+    ``metrics`` (optional) is the serve stack's shared
+    ``MetricsRegistry`` (repro/obs/metrics.py): the controller publishes
+    its backpressure counter and per-bucket wait gauges there so one
+    ``snapshot()`` covers admission next to the server's own metrics.
+    A standalone controller gets a private registry — no None checks.
+    """
+
+    def __init__(self, cfg: AdmissionConfig = AdmissionConfig(),
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._m_deferred = self.metrics.counter(
+            "serve_deferrals_total",
+            "offer() refusals: arrivals deferred by backpressure")
         # Consecutive rounds each bucket had pending work but was not
         # served (the aging clock), and the lifetime max of that clock.
         self._wait: Dict[Hashable, int] = {}
@@ -172,7 +186,11 @@ class AdmissionController:
         self.demand_rounds: Dict[Hashable, int] = {}
         self.served_rounds: Dict[Hashable, int] = {}
         self.frames_served: Dict[Hashable, int] = {}
-        self.deferred = 0       # offer() refusals (backpressure events)
+
+    @property
+    def deferred(self) -> int:
+        """Lifetime offer() refusals (backpressure events)."""
+        return int(self._m_deferred.value)
 
     # -- backpressure --------------------------------------------------------
     def offer(self, waiting_now: int) -> bool:
@@ -180,7 +198,7 @@ class AdmissionController:
         (counted — a deferred arrival retried next round counts again)."""
         if self.cfg.max_waiting is not None \
                 and waiting_now >= self.cfg.max_waiting:
-            self.deferred += 1
+            self._m_deferred.inc()
             return False
         return True
 
@@ -242,6 +260,10 @@ class AdmissionController:
                 w = self._wait.get(b, 0) + 1
                 self._wait[b] = w
                 self.max_wait[b] = max(self.max_wait.get(b, 0), w)
+                self.metrics.gauge(
+                    "serve_bucket_max_wait_rounds",
+                    "lifetime max consecutive unserved rounds with "
+                    "pending work", bucket=str(b)).set_max(w)
 
     def record_service(self, bucket: Hashable, frames: int) -> None:
         self.frames_served[bucket] = \

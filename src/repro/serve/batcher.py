@@ -46,6 +46,7 @@ import numpy as np
 from repro.core import engine
 from repro.core.camera import Camera
 from repro.core.engine import EngineCarry, StreamsResult
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.session import SessionManager
 
 _EYE = np.eye(4, dtype=np.float32)
@@ -79,7 +80,8 @@ class ContinuousBatcher:
                  group: Optional[int] = None,
                  collect_frames: bool = False,
                  bucket: Optional[Tuple[int, int]] = None,
-                 n_gaussians: Optional[int] = None):
+                 n_gaussians: Optional[int] = None,
+                 tracer: Optional[Tracer] = None):
         if slots < 1 or chunk < 1:
             raise ValueError(f"need slots >= 1 and chunk >= 1, got "
                              f"{slots}, {chunk}")
@@ -102,6 +104,12 @@ class ContinuousBatcher:
         # (pipeline.contrib_enabled), so fresh carries match the scan
         # body's pytree structure. None = prior machinery off.
         self.n_gaussians = n_gaussians
+        # Serve-loop tracer (repro/obs/trace.py): resizes are marked as
+        # instant events on this batcher's bucket track, so a Perfetto
+        # view shows WHEN elastic B snapped next to the round spans.
+        # Defaults to the shared disabled tracer — zero overhead, no
+        # None checks.
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self._slot_sid: List[Optional[int]] = [None] * self.slots
         # Idle slots are all identical (count 0, eye pose, zero state) —
         # one shared template instead of fresh device zeros every round.
@@ -132,6 +140,8 @@ class ContinuousBatcher:
         """
         if new_slots < 1:
             raise ValueError(f"need slots >= 1, got {new_slots}")
+        self.tracer.instant("resize", track=f"bucket {self.bucket}",
+                            args={"from": self.slots, "to": int(new_slots)})
         unbound: List[int] = []
         for i in range(new_slots, self.slots):
             sid = self._slot_sid[i]

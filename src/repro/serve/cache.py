@@ -37,6 +37,7 @@ wrappers, so a cache entry IS a compiled executable after first use.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import (Callable, Deque, Dict, Hashable, Optional, Sequence,
                     Tuple)
@@ -44,6 +45,7 @@ from typing import (Callable, Deque, Dict, Hashable, Optional, Sequence,
 import numpy as np
 
 from repro.core.plan import rerender_demand
+from repro.obs.trace import NULL_TRACER, Tracer
 
 DEFAULT_R_BUCKETS = (8, 16, 32)
 DEFAULT_B_BUCKETS = (2, 4, 8)
@@ -151,8 +153,17 @@ def suggest_buckets(records, queue_depth: int,
 
 @dataclasses.dataclass
 class CacheEntry:
-    fn: Callable
+    fn: Callable                  # instrumented dispatch wrapper
     hits: int = 0
+    # Compile-vs-dispatch split (DESIGN.md §13). jit compiles lazily, so
+    # the *first call* through the entry is where trace+compile cost
+    # lands — its wall time is recorded here, separately from the
+    # steady-state dispatch (enqueue) accumulators that every later call
+    # feeds. All host-timed: a jitted call returns after compile (first
+    # call) / enqueue (steady state), before device execution finishes.
+    compile_seconds: Optional[float] = None
+    dispatch_calls: int = 0
+    dispatch_seconds: float = 0.0
 
 
 class ExecutableCache:
@@ -160,16 +171,42 @@ class ExecutableCache:
 
     ``log`` keeps the most recent lookups only (the counters are exact
     for the whole lifetime) so a long-running server's memory stays flat.
+
+    Every entry's callable is wrapped to split **first-call compile**
+    time from **steady-state dispatch** time per key (``stats()``
+    surfaces both as ``per_key_timing``); with a ``tracer``, the first
+    call additionally emits a ``compile`` span carrying the key, so the
+    trace shows exactly which round paid which compile.
     """
 
     LOG_KEEP = 1024
 
-    def __init__(self):
+    def __init__(self, tracer: Optional[Tracer] = None):
         self._entries: Dict[Hashable, CacheEntry] = {}
+        self._tracer = NULL_TRACER if tracer is None else tracer
         self.misses = 0
         self.hits = 0
         self.evicted_keys = 0
         self.log: Deque[Tuple[str, Hashable]] = deque(maxlen=self.LOG_KEEP)
+
+    def _instrument(self, key: Hashable, fn: Callable,
+                    entry: CacheEntry) -> Callable:
+        def dispatch(*args, **kwargs):
+            if entry.compile_seconds is None:
+                # First call: jit traces + compiles synchronously before
+                # returning, so this wall time IS the compile bill.
+                with self._tracer.span("compile", track="cache",
+                                       args={"key": str(key)}):
+                    t0 = time.perf_counter()
+                    out = fn(*args, **kwargs)
+                    entry.compile_seconds = time.perf_counter() - t0
+                return out
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            entry.dispatch_seconds += time.perf_counter() - t0
+            entry.dispatch_calls += 1
+            return out
+        return dispatch
 
     def get(self, key: Hashable,
             builder: Optional[Callable[[], Callable]] = None) -> Callable:
@@ -179,7 +216,9 @@ class ExecutableCache:
                 raise KeyError(key)
             self.misses += 1
             self.log.append(("miss", key))
-            entry = self._entries[key] = CacheEntry(fn=builder())
+            entry = CacheEntry(fn=None)
+            entry.fn = self._instrument(key, builder(), entry)
+            self._entries[key] = entry
         else:
             self.hits += 1
             entry.hits += 1
@@ -221,4 +260,17 @@ class ExecutableCache:
             # this next to the per-bucket latency split).
             "per_key_hits": {str(k): e.hits
                              for k, e in self._entries.items()},
+            # The compile-vs-dispatch split (DESIGN.md §13): first-call
+            # wall time (trace + XLA compile) next to the steady-state
+            # dispatch-enqueue accumulators, per key. compile_ms is None
+            # until the entry's first call (built but never invoked).
+            "per_key_timing": {str(k): {
+                "compile_ms": None if e.compile_seconds is None
+                else round(1e3 * e.compile_seconds, 3),
+                "dispatch_calls": e.dispatch_calls,
+                "dispatch_ms_total": round(1e3 * e.dispatch_seconds, 3),
+                "dispatch_ms_mean": round(
+                    1e3 * e.dispatch_seconds / e.dispatch_calls, 3)
+                if e.dispatch_calls else None,
+            } for k, e in self._entries.items()},
         }

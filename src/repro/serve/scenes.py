@@ -114,6 +114,14 @@ class SceneEntry:
     registered_at: float = 0.0
     refs: int = 0               # live sessions pinned to this scene
     streams_seen: int = 0       # lifetime attach count (metrics)
+    padded_bytes: int = 0       # device bytes of the padded scene arrays
+
+
+def scene_bytes(scene: GaussianScene) -> int:
+    """Total bytes of a scene pytree's arrays — the residency a padded
+    scene actually occupies (obs gauges read this per bucket)."""
+    return sum(int(a.size) * a.dtype.itemsize
+               for a in jax.tree_util.tree_leaves(scene))
 
 
 class SceneRegistry:
@@ -138,11 +146,13 @@ class SceneRegistry:
     def register(self, scene: GaussianScene, *,
                  now: float = 0.0) -> SceneEntry:
         n_bucket = snap_scene_bucket(scene.num_gaussians, self.buckets)
+        padded = pad_scene(scene, n_bucket)
         entry = SceneEntry(scene_id=self._next_id,
-                           scene=pad_scene(scene, n_bucket),
+                           scene=padded,
                            true_n=scene.num_gaussians,
                            bucket=(n_bucket, int(scene.sh.shape[1])),
-                           registered_at=now)
+                           registered_at=now,
+                           padded_bytes=scene_bytes(padded))
         self._next_id += 1
         self._entries[entry.scene_id] = entry
         self.registered += 1
@@ -220,14 +230,31 @@ class SceneRegistry:
         scenes += [scenes[0]] * (size - len(scenes))
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scenes)
 
+    def residency(self) -> Dict[Tuple[int, int], dict]:
+        """Per-bucket residency summary — scenes resident, padded bytes
+        held on device, and live stream refcounts. This is what the
+        server's ``scene_residency_*`` gauges publish (DESIGN.md §13)."""
+        out: Dict[Tuple[int, int], dict] = {}
+        for e in self._entries.values():
+            r = out.setdefault(e.bucket, {"scenes": 0, "padded_bytes": 0,
+                                          "refs": 0})
+            r["scenes"] += 1
+            r["padded_bytes"] += e.padded_bytes
+            r["refs"] += e.refs
+        return out
+
     def stats(self) -> dict:
         return {
             "scenes": len(self._entries),
             "registered": self.registered,
             "evicted": self.evicted,
             "buckets_in_use": list(self.buckets_in_use()),
+            "padded_bytes": sum(e.padded_bytes
+                                for e in self._entries.values()),
+            "per_bucket": {str(b): r for b, r in self.residency().items()},
             "per_scene": {
                 str(i): {"true_n": e.true_n, "bucket": e.bucket,
-                         "refs": e.refs, "streams_seen": e.streams_seen}
+                         "refs": e.refs, "streams_seen": e.streams_seen,
+                         "padded_bytes": e.padded_bytes}
                 for i, e in self._entries.items()},
         }

@@ -73,6 +73,8 @@ from repro.core.gaussians import GaussianScene
 from repro.core.pipeline import (RenderConfig, StackedRecords,
                                  contrib_enabled)
 from repro.core.plan import rerender_demand
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.core.streaming import (AcceleratorConfig, FrameWork,
                                   frameworks_from_stacked,
                                   simulate_sequence, throughput)
@@ -102,6 +104,14 @@ class ServeConfig:
     collect_frames: bool = False  # retain rendered frames on sessions
     sim_latency: bool = False   # accelerator-in-the-loop metrics
     sim_keep: int = 4096        # most recent frames kept for the sim
+    # Observability (repro/obs, DESIGN.md §13): ``trace=True`` records
+    # round/plan/resize/admit/build/dispatch/barrier/commit spans (one
+    # track per scene-bucket group) plus per-key compile spans, exported
+    # as Chrome-trace JSON via ``StreamServer.tracer``. Off by default —
+    # a disabled tracer's span() is a shared no-op. The metrics registry
+    # is always on (host counters; report() composes its snapshot).
+    trace: bool = False
+    trace_keep: int = Tracer.KEEP  # tracer event-buffer bound
     # Round planning + backpressure + SLO classes (serve/admission.py).
     admission: AdmissionConfig = AdmissionConfig()
 
@@ -110,6 +120,9 @@ class ServeConfig:
         if self.b_buckets is not None:
             validate_buckets(self.b_buckets, "b_buckets")
         validate_buckets(self.scene_buckets, "scene_buckets")
+        if self.trace_keep < 1:
+            raise ValueError(f"trace_keep must be >= 1, got "
+                             f"{self.trace_keep}")
 
     @property
     def slot_buckets(self) -> Tuple[int, ...]:
@@ -264,11 +277,59 @@ class StreamServer:
         self.cam = cam
         self.base_cfg = base_cfg
         self.scfg = scfg
+        # Observability substrate (repro/obs, DESIGN.md §13): ONE metrics
+        # registry every serve component publishes into — report()
+        # composes its snapshot() instead of re-deriving ad-hoc dicts —
+        # and ONE tracer whose spans the serving round opens below.
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(enabled=scfg.trace, keep=scfg.trace_keep)
+        m = self.metrics
+        self._m_streams = m.counter("serve_streams_attached_total",
+                                    "streams admitted via attach()")
+        self._m_finished = m.counter("serve_streams_finished_total",
+                                     "streams drained and detached")
+        self._m_rounds = m.counter("serve_rounds_total",
+                                   "step() invocations")
+        self._m_busy = m.counter("serve_busy_rounds_total",
+                                 "rounds that rendered at least one group")
+        self._m_frames = m.counter("serve_frames_total",
+                                   "real (non-padding) frames rendered")
+        self._m_cap_frames = m.counter(
+            "serve_capacity_frames_total",
+            "sum of B*chunk slot-frames over rendered groups")
+        self._m_render_s = m.counter("serve_render_seconds_total",
+                                     "wall seconds inside serving rounds")
+        self._m_warmup_s = m.counter("serve_warmup_seconds_total",
+                                     "wall seconds inside warmup()")
+        self._m_concurrent = m.gauge("serve_max_concurrent_streams",
+                                     "peak streams bound to slots")
+        self._m_trace_drop = m.counter(
+            "serve_rounds_trace_dropped_total",
+            "per-round trace dicts evicted from the bounded deque")
+        # Bounded latency/device-work histograms: lifetime count/sum are
+        # exact, percentiles are over the newest LATENCY_KEEP samples —
+        # finished StreamSession objects are NOT retained (a churning
+        # server would otherwise grow memory without bound). Per-bucket
+        # latency histograms feed the fairness split in report().
+        self._m_latency = m.histogram(
+            "serve_latency_seconds", "per-frame enqueue -> render-complete",
+            keep=self.LATENCY_KEEP)
+        self._m_sort_pairs = m.histogram(
+            "device_sort_pairs", "pairs entering the per-frame sort",
+            keep=scfg.history)
+        self._m_culled = m.histogram(
+            "device_culled_pairs", "pairs removed by contribution culling",
+            keep=scfg.history)
+        self._m_demand = m.histogram(
+            "device_rerender_demand",
+            "re-render tiles wanted per sparse frame (pre-cap)",
+            keep=scfg.history)
         self.policy = BucketPolicy(b_buckets=scfg.slot_buckets,
                                    r_buckets=scfg.r_buckets,
                                    quantile=scfg.quantile)
         self.manager = SessionManager(base_cfg.window)
-        self.admission = AdmissionController(scfg.admission)
+        self.admission = AdmissionController(scfg.admission,
+                                             metrics=self.metrics)
         self._meshes: Dict[int, object] = {}
         # One batcher per scene bucket in use (the ragged mixed-bucket
         # round's slot groups — a batch can only stack same-bucket
@@ -277,26 +338,14 @@ class StreamServer:
         self._batchers: Dict[Tuple[int, int], ContinuousBatcher] = {}
         for bucket in self.registry.buckets_in_use():
             self._batcher_for(bucket)
-        self.cache = ExecutableCache()
+        self.cache = ExecutableCache(tracer=self.tracer)
         self.capacity = int(scfg.r_buckets[0])
         self.capacity_history: List[int] = [self.capacity]
         self.slots_history: List[int] = [scfg.slot_buckets[0]]
-        self.streams_seen = 0
-        self.streams_finished = 0
-        # Bounded recent-latency reservoirs: exact counters above stay
-        # lifetime-accurate, percentiles are over the newest samples —
-        # finished StreamSession objects are NOT retained (a churning
-        # server would otherwise grow memory without bound). Per-bucket
-        # reservoirs feed the fairness split in report().
-        self._latencies: Deque[float] = deque(maxlen=self.LATENCY_KEEP)
-        self._bucket_latencies: Dict[Tuple[int, int], Deque[float]] = {}
-        self.rounds = 0
-        self.busy_rounds = 0
-        self.active_slot_frames = 0
-        self.capacity_frames = 0       # sum of B*chunk over rendered groups
-        self.render_seconds = 0.0
-        self.warmup_seconds = 0.0
-        self.max_concurrent = 0
+        # Bounded per-round trace (the `rounds_trace` report block):
+        # newest TRACE_KEEP round dicts; evictions are counted and
+        # published as rounds_trace_dropped so a long-lived server's
+        # report says how much history the bound cost it.
         self.trace: Deque[dict] = deque(maxlen=self.TRACE_KEEP)
         # Rolling per-sparse-frame demand samples (flat ints — all the
         # capacity picker needs), newest last.
@@ -309,6 +358,46 @@ class StreamServer:
             maxlen=max(1, scfg.sim_keep // max(scfg.chunk, 1)))
         self._sim_dropped = 0
         self._stacks: Dict[tuple, object] = {}
+
+    # -- metrics-backed counters -------------------------------------------
+    # The registry is the single source of truth (report() composes its
+    # snapshot); these properties keep the original attribute API for
+    # callers and tests.
+    @property
+    def streams_seen(self) -> int:
+        return int(self._m_streams.value)
+
+    @property
+    def streams_finished(self) -> int:
+        return int(self._m_finished.value)
+
+    @property
+    def rounds(self) -> int:
+        return int(self._m_rounds.value)
+
+    @property
+    def busy_rounds(self) -> int:
+        return int(self._m_busy.value)
+
+    @property
+    def active_slot_frames(self) -> int:
+        return int(self._m_frames.value)
+
+    @property
+    def capacity_frames(self) -> int:
+        return int(self._m_cap_frames.value)
+
+    @property
+    def render_seconds(self) -> float:
+        return float(self._m_render_s.value)
+
+    @property
+    def warmup_seconds(self) -> float:
+        return float(self._m_warmup_s.value)
+
+    @property
+    def max_concurrent(self) -> int:
+        return int(self._m_concurrent.value)
 
     # -- scenes ------------------------------------------------------------
     @property
@@ -365,7 +454,7 @@ class StreamServer:
             poses, now=self.clock() if now is None else now, scene_id=sid,
             slo=slo)
         self.registry.acquire(sid)     # pin only once the attach stuck
-        self.streams_seen += 1
+        self._m_streams.inc()
         return sess
 
     def try_attach(self, poses, now: Optional[float] = None,
@@ -432,7 +521,7 @@ class StreamServer:
             bat = ContinuousBatcher(
                 b0, self.scfg.chunk, self.cam, group=self._group_for(b0),
                 collect_frames=self.scfg.collect_frames, bucket=bucket,
-                n_gaussians=n)
+                n_gaussians=n, tracer=self.tracer)
             self._batchers[bucket] = bat
         return bat
 
@@ -489,22 +578,23 @@ class StreamServer:
         otherwise evict the in-flight rounds' live stack keys.
         """
         t0 = self.clock()
-        for bucket in self.registry.buckets_in_use():
-            ids = (self.registry.by_bucket(bucket)[0],)
-            bat = self._batcher_for(bucket)
-            for b in self.policy.b_buckets:
-                batch = bat.empty_batch(slots=b)
-                # Transient stack: NOT memoized (see docstring).
-                scenes = self.registry.stack(ids, b)
-                for r in self.policy.r_buckets:
-                    fn = self.cache.get(
-                        self._key_for(bucket, b, r),
-                        lambda b=b, r=r: self._build_for(b, r))
-                    jax.block_until_ready(fn(
-                        scenes, batch.poses, batch.counts, batch.phases,
-                        batch.carries, batch.slot_scene).frames)
+        with self.tracer.span("warmup", track="round"):
+            for bucket in self.registry.buckets_in_use():
+                ids = (self.registry.by_bucket(bucket)[0],)
+                bat = self._batcher_for(bucket)
+                for b in self.policy.b_buckets:
+                    batch = bat.empty_batch(slots=b)
+                    # Transient stack: NOT memoized (see docstring).
+                    scenes = self.registry.stack(ids, b)
+                    for r in self.policy.r_buckets:
+                        fn = self.cache.get(
+                            self._key_for(bucket, b, r),
+                            lambda b=b, r=r: self._build_for(b, r))
+                        jax.block_until_ready(fn(
+                            scenes, batch.poses, batch.counts, batch.phases,
+                            batch.carries, batch.slot_scene).frames)
         spent = self.clock() - t0
-        self.warmup_seconds += spent
+        self._m_warmup_s.inc(spent)
         return spent
 
     # -- adaptive shapes ---------------------------------------------------
@@ -564,10 +654,21 @@ class StreamServer:
         recs = result.records
         mask = np.asarray(result.frame_active).reshape(-1)
         sparse = mask & ~np.asarray(recs.is_full).reshape(-1)
+        # Device-work histograms (DESIGN.md §13): per-frame sort pairs
+        # and culled pairs over real frames, re-render demand over real
+        # sparse frames — derived from the SAME device records the
+        # engine was already returning, so observing costs no extra
+        # transfers beyond the np.asarray the demand path always paid.
+        t = np.asarray(recs.sort_pairs)
+        self._m_sort_pairs.observe_many(
+            t.reshape(-1, t.shape[-1]).sum(axis=-1)[mask])
+        self._m_culled.observe_many(
+            np.asarray(recs.culled_pairs).reshape(-1)[mask])
         if sparse.any():
             demand = np.asarray(rerender_demand(
                 recs.active, recs.overflow_tiles)).reshape(-1)
             self._demand.extend(demand[sparse].tolist())
+            self._m_demand.observe_many(demand[sparse])
         if self._demand and self.busy_rounds % self.scfg.adapt_every == 0:
             new_cap = self.policy.pick_capacity(list(self._demand))
             if new_cap != self.capacity:
@@ -642,71 +743,109 @@ class StreamServer:
         }
 
     # -- the serving round -------------------------------------------------
+    def _bucket_latency(self, bucket) -> "object":
+        """The per-scene-bucket latency histogram (labeled family of
+        ``serve_latency_seconds``) — get-or-create, so report() can read
+        a bucket that never rendered and see None percentiles."""
+        return self.metrics.histogram(
+            "serve_latency_seconds",
+            "per-frame enqueue -> render-complete",
+            keep=self.LATENCY_KEEP, bucket=str(bucket))
+
+    def _push_round(self, info: dict) -> None:
+        """Append to the bounded rounds_trace, counting the eviction the
+        bound forces (report() publishes rounds_trace_dropped)."""
+        if len(self.trace) == self.trace.maxlen:
+            self._m_trace_drop.inc()
+        self.trace.append(info)
+
     def step(self) -> dict:
-        self.rounds += 1
-        demand = self._bucket_demand()
-        plan = self.admission.plan_round(demand)
-        t0 = self.clock()
-        # Launch every planned bucket group back to back (async
-        # dispatch): group k+1's host-side batch build overlaps group
-        # k's device execution, and the single barrier below closes the
-        # whole ragged round.
-        groups = []
-        for bucket in plan:
-            bat = self._batcher_for(bucket)
-            self._maybe_resize(bucket, demand[bucket])
-            bat.admit(self.manager,
-                      allowed=set(self.registry.by_bucket(bucket)))
-            batch = bat.build(self.manager)
-            if batch.active_frames == 0:
-                continue
-            scenes = self._stack_for(batch.scene_ids, bucket, bat.slots)
-            fn = self._executable(bucket, bat.slots)
-            result = fn(scenes, batch.poses, batch.counts, batch.phases,
-                        batch.carries, batch.slot_scene)
-            groups.append((bucket, bat, batch, result))
-        self.max_concurrent = max(self.max_concurrent, self.total_bound)
-        served = [bucket for bucket, *_ in groups]
-        self.admission.note_round(demand, served)
-        if not groups:
-            info = {"round": self.rounds, "frames": 0, "bound_slots": 0,
-                    "groups": [], "capacity": self.capacity}
-            self.trace.append(info)
-            return info
-        jax.block_until_ready([(res.frames, res.carries)
-                               for *_, res in groups])
-        t1 = self.clock()
-        self.busy_rounds += 1          # before _observe: its adapt cadence
-        total_frames = 0
-        group_infos = []
-        scene_ids_served: List[int] = []
-        for bucket, bat, batch, result in groups:
-            detached = bat.commit(batch, result, self.manager, t1)
-            for sess in detached:
-                self.registry.release(sess.scene_id)
-            self.streams_finished += len(detached)
-            counts = np.asarray(batch.counts)
-            blat = self._bucket_latencies.setdefault(
-                bucket, deque(maxlen=self.LATENCY_KEEP))
-            for i in range(len(batch.sids)):
-                lats = [t1 - t for t in batch.enq_times[i][:counts[i]]]
-                self._latencies.extend(lats)
-                blat.extend(lats)
-            self._observe(result)      # counts busy rounds
-            if self.scfg.sim_latency:
-                self._record_sim(batch, result)
-            self.admission.record_service(bucket, batch.active_frames)
-            self.active_slot_frames += batch.active_frames
-            self.capacity_frames += bat.slots * self.scfg.chunk
-            total_frames += batch.active_frames
-            ids = [i for i in batch.scene_ids if i is not None]
-            scene_ids_served.extend(ids)
-            group_infos.append({
-                "scene_bucket": bucket, "frames": batch.active_frames,
-                "bound_slots": batch.bound_slots, "slots": bat.slots,
-                "scene_ids": ids, "detached": len(detached)})
-        self.render_seconds += t1 - t0
-        info = {"round": self.rounds, "frames": total_frames,
+        self._m_rounds.inc()
+        rnd = self.rounds
+        tr = self.tracer
+        with tr.span("round", track="round", args={"round": rnd}):
+            with tr.span("plan", track="round"):
+                demand = self._bucket_demand()
+                plan = self.admission.plan_round(demand)
+            t0 = self.clock()
+            # Launch every planned bucket group back to back (async
+            # dispatch): group k+1's host-side batch build overlaps
+            # group k's device execution, and the single barrier below
+            # closes the whole ragged round. Each group's host phases
+            # get spans on the group's own track ("bucket <sig>") so the
+            # trace shows the per-bucket pipelining the round relies on.
+            groups = []
+            for bucket in plan:
+                tk = f"bucket {bucket}"
+                bat = self._batcher_for(bucket)
+                with tr.span("resize", track=tk):
+                    self._maybe_resize(bucket, demand[bucket])
+                with tr.span("admit", track=tk):
+                    bat.admit(self.manager,
+                              allowed=set(self.registry.by_bucket(bucket)))
+                with tr.span("build", track=tk):
+                    batch = bat.build(self.manager)
+                if batch.active_frames == 0:
+                    continue
+                key = self._key_for(bucket, bat.slots, self.capacity)
+                with tr.span("dispatch", track=tk,
+                             args={"key": str(key),
+                                   "frames": batch.active_frames}):
+                    scenes = self._stack_for(batch.scene_ids, bucket,
+                                             bat.slots)
+                    fn = self._executable(bucket, bat.slots)
+                    result = fn(scenes, batch.poses, batch.counts,
+                                batch.phases, batch.carries,
+                                batch.slot_scene)
+                groups.append((bucket, bat, batch, result))
+            self._m_concurrent.set_max(self.total_bound)
+            served = [bucket for bucket, *_ in groups]
+            self.admission.note_round(demand, served)
+            if not groups:
+                info = {"round": rnd, "frames": 0, "bound_slots": 0,
+                        "groups": [], "capacity": self.capacity}
+                self._push_round(info)
+                return info
+            with tr.span("barrier", track="round",
+                         args={"groups": len(groups)}):
+                jax.block_until_ready([(res.frames, res.carries)
+                                       for *_, res in groups])
+            t1 = self.clock()
+            self._m_busy.inc()         # before _observe: its adapt cadence
+            total_frames = 0
+            group_infos = []
+            scene_ids_served: List[int] = []
+            for bucket, bat, batch, result in groups:
+                with tr.span("commit", track=f"bucket {bucket}"):
+                    detached = bat.commit(batch, result, self.manager, t1)
+                    for sess in detached:
+                        self.registry.release(sess.scene_id)
+                    self._m_finished.inc(len(detached))
+                    counts = np.asarray(batch.counts)
+                    blat = self._bucket_latency(bucket)
+                    for i in range(len(batch.sids)):
+                        lats = [t1 - t
+                                for t in batch.enq_times[i][:counts[i]]]
+                        self._m_latency.observe_many(lats)
+                        blat.observe_many(lats)
+                    self._observe(result)      # counts busy rounds
+                    if self.scfg.sim_latency:
+                        self._record_sim(batch, result)
+                    self.admission.record_service(bucket,
+                                                  batch.active_frames)
+                    self._m_frames.inc(batch.active_frames)
+                    self._m_cap_frames.inc(bat.slots * self.scfg.chunk)
+                    total_frames += batch.active_frames
+                    ids = [i for i in batch.scene_ids if i is not None]
+                    scene_ids_served.extend(ids)
+                    group_infos.append({
+                        "scene_bucket": bucket,
+                        "frames": batch.active_frames,
+                        "bound_slots": batch.bound_slots,
+                        "slots": bat.slots,
+                        "scene_ids": ids, "detached": len(detached)})
+            self._m_render_s.inc(t1 - t0)
+        info = {"round": rnd, "frames": total_frames,
                 "bound_slots": sum(g["bound_slots"] for g in group_infos),
                 "groups": group_infos,
                 "scene_ids": scene_ids_served,
@@ -717,7 +856,7 @@ class StreamServer:
             # Single-group rounds keep the legacy flat fields.
             info["scene_bucket"] = group_infos[0]["scene_bucket"]
             info["slots"] = group_infos[0]["slots"]
-        self.trace.append(info)
+        self._push_round(info)
         return info
 
     def run(self, traffic=None, max_rounds: int = 1000) -> dict:
@@ -751,15 +890,17 @@ class StreamServer:
 
     def _per_bucket_report(self) -> dict:
         """Per-scene-bucket fairness split: latency percentiles over the
-        bucket's own reservoir next to the admission controller's
-        wait/share accounting."""
+        bucket's own reservoir (the labeled ``serve_latency_seconds``
+        histogram family) next to the admission controller's wait/share
+        accounting. Buckets that never rendered a frame report None
+        percentiles — never NaN, never raise."""
         adm = self.admission
         shares = adm.shares()
-        buckets = (set(adm.demand_rounds) | set(self._bucket_latencies)
+        buckets = (set(adm.demand_rounds) | set(adm.frames_served)
                    | set(self._batchers))
         out = {}
         for b in sorted(buckets):
-            lat = np.asarray(self._bucket_latencies.get(b, ()))
+            lat = np.asarray(self._bucket_latency(b).values())
             bat = self._batchers.get(b)
             out[str(b)] = {
                 "frames": adm.frames_served.get(b, 0),
@@ -773,10 +914,22 @@ class StreamServer:
             }
         return out
 
+    def _publish_residency(self) -> None:
+        """Refresh the scene-residency gauges from the registry (gauges
+        are last-written, so report() re-publishing keeps them honest
+        after register/evict churn)."""
+        for b, r in self.registry.residency().items():
+            for field in ("scenes", "padded_bytes", "refs"):
+                self.metrics.gauge(
+                    f"scene_residency_{field}",
+                    f"per-bucket resident-scene {field}",
+                    bucket=str(b)).set(r[field])
+
     def report(self) -> dict:
-        lat = np.asarray(self._latencies)
+        lat = np.asarray(self._m_latency.values())
         frames = int(self.active_slot_frames)
         meshes = [m for m in self._meshes.values() if m is not None]
+        self._publish_residency()
         adm = self.admission.report()
         fairness = {k: adm[k] for k in
                     ("mode", "jain_service", "max_wait_rounds",
@@ -804,7 +957,12 @@ class StreamServer:
             "per_bucket": self._per_bucket_report(),
             "sim": self._sim_report(),
             "warmup_seconds": round(self.warmup_seconds, 3),
+            # One composed snapshot of the shared registry (counters,
+            # gauges, histograms) — the obs contract's single source of
+            # truth; everything above is a view over the same numbers.
+            "metrics": self.metrics.snapshot(),
             "rounds_trace": list(self.trace),
+            "rounds_trace_dropped": int(self._m_trace_drop.value),
             "cache_log": [{"event": ev, "key": list(map(str, key))}
                           for ev, key in self.cache.log],
             "num_devices": max((int(m.size) for m in meshes), default=1),
